@@ -1,0 +1,55 @@
+"""Paper Fig. 1: FLOPs and memory-operation breakdown of a transformer layer
+by input length — attention grows quadratically (dense) vs linearly (SWAT).
+
+Analytic counts from the exact layer shapes (the same math the roofline
+uses), reported per input length for dense / sliding-chunks / SWAT.
+"""
+from repro.core.types import AttentionSpec
+from benchmarks.common import emit
+
+D_MODEL, HEADS, D_FF, HEAD_DIM = 768, 12, 3072, 64
+W = 256  # 2w = 512, the paper's standard config
+
+
+def layer_flops(seq: int, spec: AttentionSpec):
+    qkv = 2 * seq * D_MODEL * 3 * HEADS * HEAD_DIM
+    attn = seq * HEADS * spec.flops_per_row(seq, HEAD_DIM)
+    proj = 2 * seq * HEADS * HEAD_DIM * D_MODEL
+    ffn = 2 * seq * D_MODEL * D_FF * 3
+    return qkv + proj + ffn, attn
+
+
+def layer_mops(seq: int, spec: AttentionSpec):
+    """bf16 bytes moved if S/S' spill off-chip (the un-fused baseline) vs
+    fused (S never leaves on-chip memory — the paper's kernel fusion)."""
+    cols = (seq if spec.kind == "dense"
+            else min(seq, 2 * spec.window + 1))
+    s_bytes = 2 * seq * HEADS * cols * 2 * 2   # S and S', write+read
+    x_bytes = seq * D_MODEL * 2 * 8
+    return x_bytes, s_bytes
+
+
+def main():
+    dense = AttentionSpec(kind="dense", causal=False)
+    swat = AttentionSpec(kind="swat", window=W, causal=False)
+    chunks = AttentionSpec(kind="sliding_chunks", window=W, causal=False)
+    for seq in (1024, 4096, 16384, 65536):
+        base, a_dense = layer_flops(seq, dense)
+        _, a_swat = layer_flops(seq, swat)
+        _, a_chunks = layer_flops(seq, chunks)
+        x_b, s_b = layer_mops(seq, dense)
+        _, s_b_swat = layer_mops(seq, swat)
+        emit(f"fig1/flops_frac_attn_dense/seq{seq}", 0.0,
+             f"{a_dense / (a_dense + base):.3f}")
+        emit(f"fig1/flops_frac_attn_swat/seq{seq}", 0.0,
+             f"{a_swat / (a_swat + base):.3f}")
+        emit(f"fig1/flops_ratio_chunks_vs_swat/seq{seq}", 0.0,
+             f"{a_chunks / a_swat:.2f}")
+        emit(f"fig1/mops_unfused_S_vs_x_dense/seq{seq}", 0.0,
+             f"{s_b / x_b:.2f}")
+        emit(f"fig1/mops_unfused_S_vs_x_swat/seq{seq}", 0.0,
+             f"{s_b_swat / x_b:.2f}")
+
+
+if __name__ == "__main__":
+    main()

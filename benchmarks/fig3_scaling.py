@@ -1,0 +1,52 @@
+"""Paper Fig. 3: execution time and memory vs input length for Dense,
+Sliding-Chunks and SWAT. Wall-time measured on CPU via the XLA paths
+(relative scaling is the claim; absolute numbers are CPU); memory is the
+analytic decode-cache/S-matrix footprint (exact byte counts).
+"""
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+from repro.core.types import AttentionSpec
+from repro.kernels.ops import swat_attention
+from benchmarks.common import emit, time_fn
+
+W = 128
+HEADS, D = 4, 64
+
+
+def run(seq, impl, spec):
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, HEADS, seq, D), jnp.float32)
+    k = jnp.asarray(rng.randn(1, HEADS, seq, D), jnp.float32)
+    v = jnp.asarray(rng.randn(1, HEADS, seq, D), jnp.float32)
+    fn = jax.jit(lambda q, k, v: swat_attention(q, k, v, spec, impl=impl))
+    return time_fn(fn, q, k, v, iters=3, warmup=1)
+
+
+def main():
+    dense = AttentionSpec(kind="dense", causal=False)
+    swat = AttentionSpec(kind="swat", window=W, causal=False)
+    chunks = AttentionSpec(kind="sliding_chunks", window=W, causal=False)
+    base = {}
+    for seq in (1024, 2048, 4096, 8192):
+        t_dense = run(seq, "xla", dense)
+        t_swat = run(seq, "xla", swat)
+        t_chunks = run(seq, "sliding_chunks", chunks)
+        base.setdefault("dense", t_dense)
+        base.setdefault("swat", t_swat)
+        emit(f"fig3/time_dense/seq{seq}", t_dense,
+             f"x{t_dense / base['dense']:.2f}_vs_1k")
+        emit(f"fig3/time_swat/seq{seq}", t_swat,
+             f"x{t_swat / base['swat']:.2f}_vs_1k")
+        emit(f"fig3/time_chunks/seq{seq}", t_chunks,
+             f"speedup_swat={t_chunks / t_swat:.2f}")
+        # memory: S' matrix bytes (fp32) if materialized
+        mem_dense = seq * seq * 4 * HEADS
+        mem_swat = seq * (2 * W + 1) * 4 * HEADS
+        emit(f"fig3/mem_dense_MB/seq{seq}", 0.0, f"{mem_dense / 1e6:.1f}")
+        emit(f"fig3/mem_swat_MB/seq{seq}", 0.0, f"{mem_swat / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Figs. 8-9: SWAT speedup / energy efficiency vs baselines across
+sequence length. Hardware-faithful substitution (DESIGN.md §7): the Butterfly
+FPGA baseline is not reproducible offline, so the baselines here are the two
+software baselines the paper also measures (dense, sliding-chunks), with
+  speedup  := measured CPU wall-time ratio (XLA paths, same machine)
+  energy   := FLOP ratio (energy ∝ work at fixed silicon; the paper's
+              energy-per-attention follows compute time on both devices)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AttentionSpec
+from repro.kernels.ops import swat_attention
+from benchmarks.common import emit, time_fn
+
+W = 256
+HEADS, D = 4, 64
+
+
+def t_of(impl, spec, seq):
+    rng = np.random.RandomState(0)
+    mk = lambda: jnp.asarray(rng.randn(1, HEADS, seq, D), jnp.float32)
+    q, k, v = mk(), mk(), mk()
+    fn = jax.jit(lambda q, k, v: swat_attention(q, k, v, spec, impl=impl))
+    return time_fn(fn, q, k, v, iters=3, warmup=1)
+
+
+def main():
+    dense = AttentionSpec(kind="dense", causal=False)
+    swat = AttentionSpec(kind="swat", window=W, causal=False)
+    chunks = AttentionSpec(kind="sliding_chunks", window=W, causal=False)
+    for seq in (1024, 4096, 16384):
+        ts = t_of("xla", swat, seq)
+        td = t_of("xla", dense, seq)
+        tc = t_of("sliding_chunks", chunks, seq)
+        emit(f"fig8/speedup_vs_dense/seq{seq}", ts, f"{td / ts:.2f}x")
+        emit(f"fig8/speedup_vs_chunks/seq{seq}", ts, f"{tc / ts:.2f}x")
+        # energy proxy: FLOP ratios
+        f_dense = seq
+        f_swat = min(seq, 2 * W + 1)
+        f_chunks = min(seq, 2 * W) * 2
+        emit(f"fig9/energy_gain_vs_dense/seq{seq}", 0.0,
+             f"{f_dense / f_swat:.2f}x")
+        emit(f"fig9/energy_gain_vs_chunks/seq{seq}", 0.0,
+             f"{f_chunks / f_swat:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Microbenchmarks of the three SWAT Pallas kernels (interpret mode on CPU —
+correct-path exercise + relative block-shape comparisons; real speed is a
+TPU property) and their XLA twins (compiled)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AttentionSpec
+from repro.kernels.ops import swat_attention
+from repro.kernels.swat_decode import swat_decode
+from benchmarks.common import emit, time_fn
+
+
+def main():
+    rng = np.random.RandomState(0)
+    spec = AttentionSpec(kind="swat", window=128, causal=True)
+    b, hq, hkv, l, d = 1, 4, 2, 1024, 64
+    q = jnp.asarray(rng.randn(b, hq, l, d), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(b, hkv, l, d), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(b, hkv, l, d), jnp.bfloat16)
+
+    for bq in (64, 128, 256):
+        fn = jax.jit(lambda q, k, v: swat_attention(
+            q, k, v, spec, block_q=bq, block_kv=bq, impl="xla"))
+        t = time_fn(fn, q, k, v, iters=3, warmup=1)
+        emit(f"kernel/xla_banded_block{bq}", t, f"seq{l}")
+
+    # decode kernel (ring cache) vs cache size
+    for w in (512, 2048, 8192):
+        kc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
+        vc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
+        qd = jnp.asarray(rng.randn(8, hq, 1, d), jnp.bfloat16)
+        cl = jnp.full((8,), w, jnp.int32)
+        fn = jax.jit(lambda q, k, v, c: swat_decode(q, k, v, c,
+                                                    interpret=True))
+        t = time_fn(fn, qd, kc, vc, cl, iters=2, warmup=1)
+        emit(f"kernel/decode_ring_w{w}", t, "interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Regenerate the auto tables in EXPERIMENTS.md from experiments/dryrun/*.
+
+Everything between `<!-- AUTO:name -->` / `<!-- /AUTO:name -->` markers is
+rewritten; hand-written analysis outside the markers is preserved.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load():
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        r["_file"] = f.name
+        r["_variant"] = "+swat" if "+swat" in f.name else ""
+        recs.append(r)
+    return recs
+
+
+def _fmt_s(x):
+    return f"{x:.3g}"
+
+
+def roofline_table(recs, mesh="single", variant="", tag=""):
+    rows = [r for r in recs
+            if r["mesh"] == mesh and r["_variant"] == variant
+            and r.get("tag", "") == tag and r.get("profile", "tp") == "tp"]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful FLOPs | roofline frac | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ro = r["roofline"]
+        mem = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(ro['compute_s'])} "
+            f"| {_fmt_s(ro['memory_s'])} | {_fmt_s(ro['collective_s'])} "
+            f"| {ro['dominant']} | {ro['useful_flops_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} | {mem:.1f} |")
+    out.append("")
+    out.append(f"_{len(rows)} cells._")
+    return "\n".join(out)
+
+
+def dryrun_table(recs):
+    rows = sorted(recs, key=lambda r: (r["arch"], SHAPE_ORDER.get(
+        r["shape"], 9), r["mesh"], r["_variant"], r.get("tag", "")))
+    out = ["| arch | shape | mesh | variant | devices | compile_s | rolled "
+           "| args GB/dev | temp GB/dev | collectives (count) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ro = r["roofline"]
+        mem = r["memory"]
+        coll = ", ".join(f"{k}:{v}" for k, v in sorted(
+            ro["collective_counts"].items()))
+        var = (r["_variant"] + (" " + r.get("tag", "") if r.get("tag") else "")
+               + (" " + r["profile"] if r.get("profile", "tp") != "tp"
+                  else "")).strip() or "faithful"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {var} "
+            f"| {r['devices']} | {r['compile_s']:.0f} "
+            f"| {'' if r.get('unrolled', True) else 'yes'} "
+            f"| {mem.get('argument_size_in_bytes', 0) / 1e9:.1f} "
+            f"| {mem.get('temp_size_in_bytes', 0) / 1e9:.1f} | {coll} |")
+    out.append("")
+    out.append(f"_{len(rows)} dry-run records "
+               f"(single pod = 256 chips (16,16); multi-pod = 512 chips "
+               f"(2,16,16))._")
+    return "\n".join(out)
+
+
+def swat_table(recs):
+    """Paper-faithful vs +swat variant comparison (same arch x shape)."""
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in recs
+            if not r["_variant"] and not r.get("tag")
+            and r.get("profile", "tp") == "tp"}
+    out = ["| arch | shape | metric | faithful (dense) | +swat window "
+           "| gain |", "|---|---|---|---|---|---|"]
+    n = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["_variant"] != "+swat" or r.get("tag"):
+            continue
+        b = base.get((r["arch"].replace("+swat", ""), r["shape"], r["mesh"]))
+        if not b:
+            continue
+        for metric in ("compute_s", "memory_s", "collective_s"):
+            bv, sv = b["roofline"][metric], r["roofline"][metric]
+            if bv <= 0:
+                continue
+            out.append(f"| {r['arch']} | {r['shape']} | {metric} "
+                       f"| {_fmt_s(bv)} | {_fmt_s(sv)} "
+                       f"| {bv / max(sv, 1e-12):.1f}x |")
+        n += 1
+    out.append("")
+    out.append(f"_{n} (arch x shape) pairs with both variants lowered._")
+    return "\n".join(out)
+
+
+def render(text: str, name: str, body: str) -> str:
+    pat = re.compile(rf"(<!-- AUTO:{name} -->).*?(<!-- /AUTO:{name} -->)",
+                     re.S)
+    if not pat.search(text):
+        raise SystemExit(f"marker AUTO:{name} not found in EXPERIMENTS.md")
+    return pat.sub(lambda m: f"{m.group(1)}\n{body}\n{m.group(2)}", text)
+
+
+def main():
+    recs = load()
+    text = EXP.read_text()
+    text = render(text, "dryrun", dryrun_table(recs))
+    text = render(text, "roofline_single", roofline_table(recs, "single"))
+    text = render(text, "swat_variant", swat_table(recs))
+    EXP.write_text(text)
+    print(f"EXPERIMENTS.md refreshed from {len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

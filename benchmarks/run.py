@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.emit).
+"""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig1_flops_mops",     # Fig. 1 FLOPs/MOPs breakdown
+    "benchmarks.fig2_redundancy",     # Fig. 2 / §1 chunk redundancy
+    "benchmarks.fig3_scaling",        # Fig. 3 time+memory scaling
+    "benchmarks.table1_stages",       # Table 1 pipeline balance
+    "benchmarks.table2_vmem",         # Table 2 resource usage
+    "benchmarks.fig8_speedup",        # Figs. 8-9 speedup/energy
+    "benchmarks.kernel_bench",        # kernel microbenches
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        try:
+            importlib.import_module(mod_name).main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

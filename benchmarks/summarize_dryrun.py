@@ -1,0 +1,44 @@
+"""Render the dry-run record directory as the §Dry-run / §Roofline tables."""
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(pattern: str = ""):
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        if pattern and pattern not in f.name:
+            continue
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(r):
+    ro = r["roofline"]
+    mem = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+    return (f"| {r['arch']:<22} | {r['shape']:<11} | {r['mesh']:<6} "
+            f"| {ro['compute_s']:.3e} | {ro['memory_s']:.3e} "
+            f"| {ro['collective_s']:.3e} | {ro['dominant']:<10} "
+            f"| {ro['useful_flops_ratio']:.2f} | {ro['roofline_fraction']:.3f} "
+            f"| {mem:7.1f} | {r['compile_s']:7.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| dominant | useful | roof_frac | temp_GB | compile_s |")
+SEP = "|" + "---|" * 11
+
+
+def main():
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    recs = load(pattern)
+    print(HEADER)
+    print(SEP)
+    for r in recs:
+        print(fmt_row(r))
+    print(f"\n{len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

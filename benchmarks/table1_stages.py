@@ -1,0 +1,59 @@
+"""Paper Table 1: pipeline stage timing balance. The FPGA pipeline
+(LOAD/QK/SV/ZRED/ROWSUM/DIV at ~201 cycles) maps on TPU to the per-grid-step
+phases of the fused kernel. We report each phase's FLOPs / bytes and its
+v5e cycle estimate (MXU 128x128 bf16, VPU 8x128 lanes) for the paper's
+standard config (H=64, 2w=512, BQ=BK=128) — the structural analogue of the
+stage-balance table: no phase should dominate end-to-end.
+"""
+from benchmarks.common import emit
+
+H = 64          # head dim (paper's H)
+BQ = BK = 128   # MXU-aligned blocks
+MXU_FLOPS_PER_CYCLE = 128 * 128 * 2
+VPU_LANES = 8 * 128
+CLOCK = 940e6   # v5e ~0.94 GHz
+
+
+def cycles_mxu(flops):
+    return flops / MXU_FLOPS_PER_CYCLE
+
+
+def cycles_vpu(elems, ops_per_elem=1):
+    return elems * ops_per_elem / VPU_LANES
+
+
+def main():
+    # per grid step: one (BQ x H) q block vs one (BK x H) kv block
+    qk = 2 * BQ * BK * H                 # S = Q K^T
+    exp = BQ * BK                        # exp (VPU, ~7 ops)
+    sv = 2 * BQ * BK * H                 # S' V accumulate
+    red = BQ * H                         # running rescale acc
+    rowsum = BQ * BK                     # l update
+    div = BQ * H                         # final divide (amortized / slots)
+
+    load_bytes = (BK * H * 2) * 2        # K + V blocks bf16 (the paper's LOAD)
+    load_cycles = load_bytes / (819e9 / CLOCK)
+
+    stages = [
+        ("LOAD(K/V DMA)", load_cycles),
+        ("QK (MXU)", cycles_mxu(qk)),
+        ("EXP (VPU)", cycles_vpu(exp, 7)),
+        ("SV (MXU)", cycles_mxu(sv)),
+        ("ZRED/rescale (VPU)", cycles_vpu(red, 4)),
+        ("ROWSUM (VPU)", cycles_vpu(rowsum, 1)),
+        ("DIV&OUT (VPU)", cycles_vpu(div, 3)),
+    ]
+    total = max(c for _, c in stages)    # pipelined: bound by slowest stage
+    for name, c in stages:
+        emit(f"table1/{name}", c / CLOCK * 1e6, f"{c:.0f}_cycles")
+    emit("table1/pipeline_bound", total / CLOCK * 1e6,
+         f"{total:.0f}_cycles_per_block_step")
+    # paper's FPGA pipeline: 201 cycles per row of ONE attention core;
+    # TPU block step covers 128x128 rows x cols at once.
+    rows_per_step = BQ
+    emit("table1/rows_per_cycle_vs_fpga", 0.0,
+         f"tpu={rows_per_step / total:.2f}_fpga={1 / 201:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 2: resource usage. The FPGA budget (DSP/LUT/FF/BRAM) maps to
+the TPU kernel's VMEM working set per core (16 MiB v5e). Reported for the
+same four configurations the paper synthesizes: Longformer FP16(bf16),
+BigBird, dual-pipeline BigBird, and FP32."""
+from repro.core import patterns
+from repro.core.types import AttentionSpec
+from repro.kernels.ops import get_pattern
+from benchmarks.common import emit
+
+VMEM = 16 * 2 ** 20
+
+
+def working_set(block_q, block_kv, head_dim, dtype_bytes, pipelines=1):
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * block_kv * head_dim * dtype_bytes * 2   # double-buffered DMA
+    acc = block_q * head_dim * 4                     # fp32 accumulator
+    stats = 2 * block_q * 128 * 4                    # m, l scratch
+    out = block_q * head_dim * dtype_bytes
+    return (q + kv + acc + stats + out) * pipelines
+
+
+def main():
+    configs = [
+        ("longformer_bf16", 128, 128, 64, 2, 1),
+        ("bigbird_bf16", 128, 128, 64, 2, 1),
+        ("bigbird_bf16_x2", 128, 128, 64, 2, 2),
+        ("longformer_fp32", 128, 128, 64, 4, 1),
+    ]
+    for name, bq, bk, h, db, pipes in configs:
+        ws = working_set(bq, bk, h, db, pipes)
+        emit(f"table2/vmem_{name}", 0.0,
+             f"{ws / 1024:.0f}KiB={ws / VMEM * 100:.1f}%_of_VMEM")
+    # slot counts (grid width) for the two paper patterns at 4096 tokens
+    lf = get_pattern(AttentionSpec(kind="swat", window=256, num_global=1,
+                                   causal=False), 4096, 4096, 128, 128)
+    bb = get_pattern(AttentionSpec(kind="swat", window=96, num_global=128,
+                                   num_random=2, causal=False,
+                                   random_seed=2024), 4096, 4096, 128, 128)
+    emit("table2/slots_longformer", 0.0, f"{lf.num_slots}")
+    emit("table2/slots_bigbird", 0.0, f"{bb.num_slots}")
+    emit("table2/active_frac_longformer", 0.0, f"{lf.active_fraction():.4f}")
+    emit("table2/active_frac_bigbird", 0.0, f"{bb.active_fraction():.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the SWAT attention op + a tiny Longformer in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AttentionSpec, ModelConfig
+from repro.core import model as Mod
+from repro.kernels.ops import swat_attention
+
+# --- 1. the paper's op: fused exact-band window attention ------------------
+rng = np.random.RandomState(0)
+B, H, L, D = 2, 4, 1024, 64
+q = jnp.asarray(rng.randn(B, H, L, D), jnp.float32)
+k = jnp.asarray(rng.randn(B, H, L, D), jnp.float32)
+v = jnp.asarray(rng.randn(B, H, L, D), jnp.float32)
+
+spec = AttentionSpec(kind="swat", window=128, num_global=16, causal=False)
+out = swat_attention(q, k, v, spec, impl="pallas")     # Pallas kernel
+out_xla = swat_attention(q, k, v, spec, impl="xla")    # SPMD-friendly twin
+print("swat attention:", out.shape,
+      "pallas-vs-xla max err:",
+      float(jnp.max(jnp.abs(out - out_xla))))
+
+# --- 2. a tiny Longformer LM, one training step -----------------------------
+cfg = ModelConfig(
+    name="tiny-longformer", num_layers=4, d_model=128, num_heads=4,
+    num_kv_heads=4, d_ff=512, vocab_size=1000,
+    attention=AttentionSpec(kind="swat", window=64, num_global=4,
+                            causal=True),
+    dtype="float32")
+params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+tokens = jnp.asarray(rng.randint(0, 1000, (2, 256)), jnp.int32)
+(loss, metrics), grads = jax.value_and_grad(Mod.loss_fn, has_aux=True)(
+    params, cfg, {"tokens": tokens, "labels": tokens})
+print(f"tiny longformer loss={float(loss):.3f} "
+      f"params={sum(x.size for x in jax.tree.leaves(params)):,}")
+
+# --- 3. decode with the ring KV cache (the paper's FIFO) --------------------
+logits, caches = Mod.prefill(params, cfg, {"tokens": tokens[:, :128]},
+                             max_len=512)
+tok = jnp.argmax(logits[:, 0], -1)[:, None]
+for step in range(8):
+    logits, caches = Mod.decode_step(params, cfg, {"tokens": tok}, caches)
+    tok = jnp.argmax(logits[:, 0], -1)[:, None]
+ring = caches["l0"]["k"].shape  # (super_blocks, B, Hkv, window+1+g, D)
+print("ring cache per layer:", ring, "- O(window), not O(context)")

@@ -1,0 +1,53 @@
+"""Batched serving with ring KV caches: continuous batching over more
+requests than slots; memory report shows the O(window) cache (paper Fig. 3).
+
+    PYTHONPATH=src python examples/serve_window.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.types import AttentionSpec, ModelConfig
+from repro.core import model as Mod
+from repro.serving.engine import Request, ServingEngine, ring_cache_bytes
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", num_layers=4, d_model=256, num_heads=8,
+        num_kv_heads=4, d_ff=1024, vocab_size=32000,
+        attention=AttentionSpec(kind="swat", window=256, num_global=4,
+                                causal=True),
+        dtype="float32")
+    params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.RandomState(0)
+    requests = [
+        Request(rid=i,
+                prompt=rng.randint(0, cfg.vocab_size, (64,)).astype(np.int32),
+                max_new_tokens=16)
+        for i in range(6)
+    ]
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=2048)
+    t0 = time.time()
+    results = engine.run(requests)
+    dt = time.time() - t0
+    n_tok = sum(len(r.tokens) for r in results)
+    print(f"[serve] {len(results)} requests, {n_tok} tokens "
+          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s on CPU)")
+    for r in results[:3]:
+        print(f"  rid={r.rid}: {r.tokens[:8]}...")
+
+    swat_bytes = ring_cache_bytes(cfg, 2, 65536)
+    dense_cfg = ModelConfig(**{**cfg.__dict__,
+                               "attention": AttentionSpec(kind="dense",
+                                                          causal=True)})
+    dense_bytes = ring_cache_bytes(dense_cfg, 2, 65536)
+    print(f"[serve] decode-cache @64k context: ring={swat_bytes/1e6:.1f}MB "
+          f"vs dense={dense_bytes/1e6:.1f}MB "
+          f"({dense_bytes/swat_bytes:.0f}x saving — paper Fig. 3)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Fault-tolerant checkpointing: atomic, async, retention, mesh-elastic.
+
+Layout (one directory per step):
+    <root>/step_000100.tmp/...   (written)
+    <root>/step_000100/          (atomic rename on completion)
+        manifest.json            leaf paths, shapes, dtypes, tree structure
+        arrays.npz               all leaves, flattened by manifest order
+
+Guarantees:
+  * atomicity  — readers never see partial checkpoints (tmp + rename; the
+    manifest is written last inside the tmp dir).
+  * restart    — `latest_step()` + `restore()`; corrupt/partial dirs are
+    ignored (missing manifest) so a crash mid-save cannot poison resume.
+  * elasticity — arrays are saved UNSHARDED by logical leaf (gathered), so
+    restore can re-shard onto any mesh: restore(..., sharding=tree) places
+    every leaf with jax.device_put against the *target* mesh's rules.
+  * async      — save() returns immediately; a worker thread serializes.
+    wait() joins (used before exit and in tests).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+try:  # ml_dtypes provides bfloat16/float8 etc.; bundled with jax.
+    import ml_dtypes
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """np.dtype(...) that also understands ml_dtypes names (bfloat16...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    if ml_dtypes is not None and hasattr(ml_dtypes, name):
+        return np.dtype(getattr(ml_dtypes, name))
+    raise ValueError(f"unknown dtype in checkpoint manifest: {name!r}")
+
+
+def _to_portable(a: np.ndarray) -> np.ndarray:
+    """npz round-trips only native numpy dtypes; ml_dtypes (bfloat16, fp8)
+    come back as void. Ship those as raw bytes; manifest keeps the truth."""
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        return np.frombuffer(np.ascontiguousarray(a).tobytes(), dtype=np.uint8)
+    return a
+
+
+def _from_portable(a: np.ndarray, shape, dtype: np.dtype) -> np.ndarray:
+    if a.dtype == np.uint8 and dtype != np.uint8:
+        return np.frombuffer(a.tobytes(), dtype=dtype).reshape(shape)
+    return np.asarray(a, dtype=dtype).reshape(shape)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        """Device->host transfer happens on the caller thread (cheap, and
+        keeps the donated buffers coherent); file IO on the worker."""
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+        if blocking:
+            self._write(step, host, treedef)
+        else:
+            self._ensure_worker()
+            self._q.put((step, host, treedef))
+
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step, host_leaves, treedef):
+        final = self.root / f"step_{step:08d}"
+        # unique tmp per writer: a blocking save and a queued async save of
+        # the same step may run concurrently (e.g. final-step save); a shared
+        # tmp dir races (one writer rmtree's it mid-write). The atomic
+        # os.replace at the end makes last-wins safe.
+        tmp = self.root / f"step_{step:08d}.tmp.{os.getpid()}.{id(host_leaves)}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz",
+                 **{f"leaf_{i}": _to_portable(a)
+                    for i, a in enumerate(host_leaves)})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "num_leaves": len(host_leaves),
+            "shapes": [list(a.shape) for a in host_leaves],
+            "dtypes": [str(a.dtype) for a in host_leaves],
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        try:
+            if final.exists():
+                shutil.rmtree(final, ignore_errors=True)
+            os.replace(tmp, final)
+        except OSError:
+            # a concurrent writer of the same step won the rename; its
+            # payload is identical — drop ours
+            shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self):
+        if self._worker is not None and self._worker.is_alive():
+            self._q.join()
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # ---------------------------------------------------------- restore ----
+    def all_steps(self):
+        steps = []
+        for p in self.root.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "manifest.json").exists():
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, sharding: Any = None) -> Any:
+        """`like`: pytree with the target structure (shapes may be checked).
+        `sharding`: optional matching pytree of Sharding — enables restoring
+        onto a different mesh than the one that saved (elastic restart)."""
+        d = self.root / f"step_{step:08d}"
+        data = np.load(d / "arrays.npz")
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten(like)
+        assert manifest["num_leaves"] == len(leaves), "tree structure changed"
+        out = []
+        sh_leaves = (_flatten(sharding)[0] if sharding is not None
+                     else [None] * len(leaves))
+        for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+            saved_dtype = _resolve_dtype(manifest["dtypes"][i])
+            saved_shape = tuple(manifest["shapes"][i])
+            assert saved_shape == tuple(ref.shape), (
+                f"leaf {i}: ckpt {saved_shape} vs model {ref.shape}")
+            a = _from_portable(data[f"leaf_{i}"], saved_shape, saved_dtype)
+            if a.dtype != ref.dtype:
+                a = a.astype(ref.dtype)
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.numpy.asarray(a))
+        return jax.tree_util.tree_unflatten(treedef, out)

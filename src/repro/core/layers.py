@@ -1,0 +1,253 @@
+"""Neural net layers: norms, rotary embeddings, GQA attention, MLP.
+
+Parameters are plain pytrees (dicts of jnp arrays); every layer has an
+`init_*` returning params and an `apply`-style function. No framework
+dependency — keeps scan-over-layers and sharding rules transparent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import AttentionSpec, ModelConfig
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1+scale) parametrization
+
+
+def rmsnorm(params: Params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, D) with positions (..., L) or (L,). Rotates pairs
+    (x[2i], x[2i+1]) — llama convention (split-half)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                    # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((length, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ------------------------------------------------------------ attention ----
+
+@dataclasses.dataclass(frozen=True)
+class AttentionLayerCfg:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    spec: AttentionSpec
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    cross: bool = False          # cross-attention (whisper decoder)
+
+
+def init_attention(key, cfg: AttentionLayerCfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    dm, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], (dm, hq * dh), dtype=dtype),
+        "wk": _dense_init(ks[1], (dm, hkv * dh), dtype=dtype),
+        "wv": _dense_init(ks[2], (dm, hkv * dh), dtype=dtype),
+        "wo": _dense_init(ks[3], (hq * dh, dm), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttentionLayerCfg, x, kv_x):
+    b, l, _ = x.shape
+    lkv = kv_x.shape[1]
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, l, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, lkv, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, lkv, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attention_layer(params: Params, cfg: AttentionLayerCfg, x, *,
+                    kv_x=None, positions=None, impl: str = "xla") -> jax.Array:
+    """Full-sequence attention (training / prefill). x: (B, L, Dm)."""
+    b, l, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(params, cfg, x, kv_x)
+    if cfg.use_rope and not cfg.cross:
+        pos = (jnp.arange(l) if positions is None else positions)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    out = kops.swat_attention(q, k, v, cfg.spec, impl=impl)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, -1)
+    return out @ params["wo"]
+
+
+# KV cache ------------------------------------------------------------------
+
+def cache_capacity(cfg: AttentionLayerCfg, max_len: int) -> int:
+    """Ring capacity: window+1 for causal sparse attention (the paper's FIFO),
+    full context for dense."""
+    if cfg.spec.is_sparse:
+        cap = cfg.spec.window + 1 + cfg.spec.num_global
+        return min(cap, max_len)
+    return max_len
+
+
+def init_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    cap = cache_capacity(cfg, max_len)
+    shape = (batch, cfg.num_kv_heads, cap, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
+                     impl: str = "xla"):
+    """One-token decode. x: (B, 1, Dm). Ring insertion at (step mod cap) for
+    sparse specs — the paper's FIFO replacement policy (row index mod window).
+    Global tokens occupy pinned slots [0, g) (paper §4.1's fixed K/V buffers);
+    the ring occupies [g, cap)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    step = cache["step"]
+    if cfg.use_rope and not cfg.cross:
+        pos = jnp.full((1,), step, jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    cap = cache["k"].shape[2]
+    g = cfg.spec.num_global if cfg.spec.is_sparse else 0
+    ring = cap - g
+    slot = jnp.where(step < g, step, g + (step - g) % ring)
+    k_cache = _dyn_update(cache["k"], k_new, slot)
+    v_cache = _dyn_update(cache["v"], v_new, slot)
+    cache_len = jnp.minimum(step + 1, cap)
+    out = kops.decode_attention(q, k_cache, v_cache,
+                                cache_len[None, None, None, None]
+                                * jnp.ones((b, 1, 1, 1), jnp.int32),
+                                cfg.spec)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    new_cache = {"k": k_cache, "v": v_cache, "step": step + 1}
+    return out @ params["wo"], new_cache
+
+
+def _dyn_update(cache, new, slot):
+    """Insert one row at dynamic `slot` along the cap axis.
+
+    Implemented as iota==slot select, NOT dynamic_update_slice: a scatter at
+    a dynamic index across a sequence-sharded cache forces XLA SPMD into
+    "involuntary full rematerialization" (it replicates the whole cache
+    every step). The select partitions trivially under any cap sharding at
+    the cost of a full-cache write — decode already reads the full cache for
+    attention, so the added traffic is bounded at ~1.5x and the collective
+    catastrophe is gone (see EXPERIMENTS.md §Perf).
+    cache: (B, H, cap, D); new: (B, H, 1, D); slot: scalar int32."""
+    cap = cache.shape[2]
+    hit = (jnp.arange(cap, dtype=jnp.int32)
+           == slot.astype(jnp.int32))[None, None, :, None]
+    return jnp.where(hit, new.astype(cache.dtype), cache)
+
+
+def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
+                     positions=None):
+    """Fill a cache from a prompt (B, L, Dm). For ring caches only the last
+    `cap` tokens are retained (earlier ones are outside every future window)."""
+    b, l, _ = x.shape
+    _, k, v = _project_qkv(params, cfg, x, x)
+    if cfg.use_rope and not cfg.cross:
+        pos = jnp.arange(l) if positions is None else positions
+        k = apply_rope(k, pos, cfg.rope_theta)
+    cap = cache_capacity(cfg, max_len)
+    cache = init_kv_cache(cfg, b, max_len, dtype=k.dtype)
+    g = cfg.spec.num_global if cfg.spec.is_sparse else 0
+    if l <= cap:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, 0, 0, 0))
+    else:
+        # pinned globals + ring tail, laid out to match attention_decode
+        ring = cap - g
+        start = l - ring
+        ks = jnp.concatenate([k[:, :, :g], _ring_tail(k, start, ring, g)], 2)
+        vs = jnp.concatenate([v[:, :, :g], _ring_tail(v, start, ring, g)], 2)
+        cache["k"], cache["v"] = ks, vs
+    cache["step"] = jnp.asarray(l, jnp.int32)
+    return cache
+
+
+def _ring_tail(k, start, ring, g):
+    """Last `ring` rows placed at their ring slots (slot = g+(i-g) % ring)."""
+    tail = jax.lax.dynamic_slice_in_dim(k, start, ring, axis=2)
+    # token index of tail[j] is start+j; its slot is (start+j-g) % ring
+    idx = (start + jnp.arange(ring) - g) % ring
+    return jnp.zeros_like(tail).at[:, :, idx].set(tail)
+
+
+# ---------------------------------------------------------------- mlp ------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16,
+             gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w1": _dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+         "w2": _dense_init(ks[1], (d_ff, d_model), dtype=dtype)}
+    if gated:
+        p["w3"] = _dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params: Params, x, activation: str = "silu"):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(x @ params["w1"])
+    if "w3" in params:
+        h = h * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x

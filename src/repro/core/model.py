@@ -1,0 +1,418 @@
+"""Composable model assembly: decoder LMs, hybrid (Jamba), MoE, enc-dec.
+
+The stack is organized as `num_super_blocks` repetitions of
+`cfg.layer_pattern` (a tuple of layer kinds), scanned with `jax.lax.scan` so
+the HLO contains ONE super-block regardless of depth — essential for the
+512-fake-device dry-run compile times and the natural seam for pipeline
+parallelism / remat.
+
+Layer kinds:
+  attn / attn_moe     - GQA attention + (dense | MoE) FFN
+  local_attn          - attention with cfg.local_attention spec (gemma2)
+  mamba / mamba_moe   - Mamba2 mixer + optional (dense | MoE) FFN
+  xattn               - self-attn + cross-attn + FFN (whisper decoder)
+
+Three entry points per model: `loss_fn` (train), `prefill`, `decode_step`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import moe as M
+from repro.core import ssm as S
+from repro.core.types import AttentionSpec, ModelConfig
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def attn_cfg(cfg: ModelConfig, kind: str, cross: bool = False
+             ) -> L.AttentionLayerCfg:
+    spec = cfg.local_attention if kind == "local_attn" else cfg.attention
+    if cross:
+        spec = AttentionSpec(kind="dense", causal=False)
+    return L.AttentionLayerCfg(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        spec=spec, qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+        use_rope=cfg.use_rope, cross=cross)
+
+
+# ------------------------------------------------------------------ init ---
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_rmsnorm(cfg.d_model)}
+    if kind.startswith("mamba"):
+        p["mixer"] = S.init_mamba(ks[0], cfg.d_model, cfg.ssm, dtype=dt)
+    else:
+        p["mixer"] = L.init_attention(ks[0], attn_cfg(cfg, kind), dtype=dt)
+    if kind == "xattn":
+        p["norm_x"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = L.init_attention(ks[1], attn_cfg(cfg, kind, cross=True),
+                                      dtype=dt)
+    if kind.endswith("_moe"):
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = M.init_moe(ks[2], cfg.d_model, cfg.d_ff, cfg.moe, dtype=dt)
+    elif cfg.d_ff > 0:
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def _init_super_block(key, cfg: ModelConfig, pattern) -> Params:
+    keys = jax.random.split(key, len(pattern))
+    return {f"l{i}": _init_layer(keys[i], cfg, kind)
+            for i, kind in enumerate(pattern)}
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+    params: Params = {}
+    if cfg.embed_inputs:
+        params["embed"] = (jax.random.normal(k_emb,
+                                             (cfg.vocab_size, cfg.d_model),
+                                             jnp.float32) * 0.02).astype(dt)
+    blk_keys = jax.random.split(k_blocks, cfg.num_super_blocks)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_super_block(k, cfg, cfg.layer_pattern))(blk_keys)
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+        ).astype(dt)
+    if cfg.encoder_decoder:
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_super_block(k, cfg_encoder(cfg), ("attn",))
+        )(enc_keys)
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    return params
+
+
+@functools.lru_cache(maxsize=64)
+def cfg_encoder(cfg: ModelConfig) -> ModelConfig:
+    """Whisper encoder: bidirectional self-attention, no causality."""
+    return dataclasses.replace(
+        cfg, layer_pattern=("attn",), use_rope=False,
+        attention=dataclasses.replace(cfg.attention, causal=False))
+
+
+# --------------------------------------------------------------- forward ---
+
+def _apply_layer(p: Params, cfg: ModelConfig, kind: str, x, *,
+                 enc_out=None, impl: str, positions=None):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind.startswith("mamba"):
+        x = x + S.mamba_block(p["mixer"], h, cfg.ssm,
+                              chunk=cfg.ssm.chunk_size)
+    else:
+        x = x + L.attention_layer(p["mixer"], attn_cfg(cfg, kind), h,
+                                  positions=positions, impl=impl)
+    if kind == "xattn":
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + L.attention_layer(p["cross"], attn_cfg(cfg, kind, cross=True),
+                                  h, kv_x=enc_out, impl=impl)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = M.moe_ffn(p["moe"], h, cfg.moe)
+        x = x + y
+    elif "mlp" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+    return x, aux
+
+
+REMAT_POLICIES = {
+    # recompute everything in the backward pass: minimum live memory,
+    # maximum recompute bytes (the default at 1000-node scale where HBM is
+    # the binding constraint)
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    # save matmul outputs (attention/FFN dots): ~2x checkpointed activation
+    # footprint, removes the recompute of every heavy op from the bwd pass —
+    # the memory-roofline lever for small models with HBM headroom
+    # (EXPERIMENTS.md §Perf cell 3 it.2)
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _stack_forward(blocks: Params, cfg: ModelConfig, x, pattern, *,
+                   enc_out=None, impl: str, remat: bool,
+                   act_sharding=None, unroll: bool = False,
+                   remat_policy: str = "nothing"):
+    def constrain(x):
+        if act_sharding is not None:
+            return jax.lax.with_sharding_constraint(x, act_sharding)
+        return x
+
+    def block_fn(carry, blk_p):
+        x, aux = carry
+        for i, kind in enumerate(pattern):
+            x, a = _apply_layer(blk_p[f"l{i}"], cfg, kind, x,
+                                enc_out=enc_out, impl=impl)
+            aux = aux + a
+        return (constrain(x), aux), None
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn,
+                                  policy=REMAT_POLICIES[remat_policy])
+    n_blocks = jax.tree.leaves(blocks)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(block_fn,
+                               (constrain(x), jnp.zeros((), jnp.float32)),
+                               blocks,
+                               unroll=n_blocks if unroll else 1)
+    return x, aux
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    if "embeddings" in batch:
+        # modality-frontend stub (VLM patches / audio frames): precomputed
+        # embeddings bypass the token table
+        x = batch["embeddings"].astype(_dtype(cfg))
+    elif cfg.embed_inputs:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        raise ValueError("batch needs 'tokens' or 'embeddings'")
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if not cfg.use_rope:  # sinusoidal absolute positions (whisper)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model
+                                       ).astype(x.dtype)[None]
+    return x
+
+
+def _unembed(params: Params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jax.lax.dot_general(
+        x, head, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return L.softcap(logits, cfg.final_softcap)
+
+
+def encode(params: Params, cfg: ModelConfig, batch):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = batch["enc_embeddings"].astype(_dtype(cfg))
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model
+                                   ).astype(x.dtype)[None]
+    ecfg = cfg_encoder(cfg)
+    x, _ = _stack_forward(params["enc_blocks"], ecfg, x, ("attn",),
+                          impl="xla", remat=False)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_logits(params: Params, cfg: ModelConfig, batch, *,
+                   impl: str = "xla", remat: bool = True,
+                   act_sharding=None, unroll: bool = False,
+                   remat_policy: str = "nothing"):
+    enc_out = encode(params, cfg, batch) if cfg.encoder_decoder else None
+    x = embed_tokens(params, cfg, batch)
+    x, aux = _stack_forward(params["blocks"], cfg, x, cfg.layer_pattern,
+                            enc_out=enc_out, impl=impl, remat=remat,
+                            act_sharding=act_sharding, unroll=unroll,
+                            remat_policy=remat_policy)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch, *,
+            impl: str = "xla", remat: bool = True,
+            aux_weight: float = 0.01, act_sharding=None,
+            unroll: bool = False, remat_policy: str = "nothing"):
+    """Next-token cross entropy. batch["labels"]: (B, L) int32; positions
+    with label < 0 are masked out."""
+    logits, aux = forward_logits(params, cfg, batch, impl=impl, remat=remat,
+                                 act_sharding=act_sharding, unroll=unroll,
+                                 remat_policy=remat_policy)
+    labels = batch["labels"]
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = labels[:, 1:]
+    valid = targets >= 0
+    tsafe = jnp.where(valid, targets, 0)
+    # TP-safe cross entropy: no take_along_axis over the (model-sharded)
+    # vocab axis — a dynamic gather there makes SPMD all-gather the full
+    # logits (~67 GB/step for a 256k vocab; EXPERIMENTS.md §Perf it.2).
+    # iota==label masking keeps every op vocab-partitioned; the only
+    # collectives are the (B, L)-sized max/sum partial reductions.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    hit = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+           == tsafe[..., None])
+    picked = jnp.sum(jnp.where(hit, z, 0.0), axis=-1)
+    nll = jnp.where(valid, lse - picked, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / denom
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": denom.astype(jnp.float32)}
+
+
+# --------------------------------------------------------------- serving ---
+
+def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      enc_len: int = 0):
+    dt = _dtype(cfg)
+    if kind.startswith("mamba"):
+        return S.init_mamba_cache(cfg.d_model, cfg.ssm, batch, dtype=dt)
+    cache = L.init_kv_cache(attn_cfg(cfg, kind), batch, max_len, dtype=dt)
+    if kind == "xattn":
+        shape = (batch, cfg.num_kv_heads, max(enc_len, 1),
+                 cfg.resolved_head_dim)
+        cache["xk"] = jnp.zeros(shape, dt)
+        cache["xv"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                enc_len: int = 0) -> Params:
+    """Stacked (num_super_blocks leading dim) decode caches."""
+    def one(_):
+        return {f"l{i}": _layer_cache_init(cfg, kind, batch, max_len, enc_len)
+                for i, kind in enumerate(cfg.layer_pattern)}
+    caches = jax.vmap(one)(jnp.arange(cfg.num_super_blocks))
+    return caches
+
+
+def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind.startswith("mamba"):
+        y, new_cache = S.mamba_decode(p["mixer"], h, cache, cfg.ssm)
+    else:
+        y, new_cache = L.attention_decode(p["mixer"], attn_cfg(cfg, kind), h,
+                                          cache)
+    x = x + y
+    if kind == "xattn":
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        ccfg = attn_cfg(cfg, kind, cross=True)
+        q, _, _ = L._project_qkv(p["cross"], ccfg, h, h)
+        out = kops.decode_attention(
+            q, cache["xk"], cache["xv"],
+            jnp.full((x.shape[0], 1, 1, 1), cache["xk"].shape[2], jnp.int32),
+            ccfg.spec)
+        out = out.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, -1)
+        x = x + out @ p["cross"]["wo"]
+        new_cache = {**new_cache, "xk": cache["xk"], "xv": cache["xv"]}
+    if "moe" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = M.moe_ffn(p["moe"], h, cfg.moe)
+        x = x + y
+    elif "mlp" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+    return x, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
+                impl: str = "xla", unroll: bool = False):
+    """One token for every sequence. batch: {"tokens": (B, 1)} (or
+    {"embeddings": (B, 1, D)}). Returns (logits (B, 1, V), new caches)."""
+    x = embed_tokens(params, cfg, batch)
+
+    def block_fn(x, inp):
+        blk_p, blk_cache = inp
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, nc = _apply_layer_decode(blk_p[f"l{i}"], cfg, kind, x,
+                                        blk_cache[f"l{i}"])
+            new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(
+        block_fn, x, (params["blocks"], caches),
+        unroll=cfg.num_super_blocks if unroll else 1)
+    return _unembed(params, cfg, x), new_caches
+
+
+def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
+            impl: str = "xla", unroll: bool = False):
+    """Run the prompt, return (last-position logits, primed caches).
+
+    Implemented as forward + cache extraction per layer: each attention layer
+    re-projects K/V into its (ring) cache; mamba layers replay their final
+    state. Prompt length L <= max_len."""
+    enc_out = encode(params, cfg, batch) if cfg.encoder_decoder else None
+    x = embed_tokens(params, cfg, batch)
+    l = x.shape[1]
+
+    def block_fn(carry, blk_p):
+        x, = carry
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            p = blk_p[f"l{i}"]
+            h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+            if kind.startswith("mamba"):
+                y = S.mamba_block(p["mixer"], h, cfg.ssm,
+                                  chunk=cfg.ssm.chunk_size)
+                cache = _mamba_prefill_cache(p["mixer"], h, cfg)
+            else:
+                acfg = attn_cfg(cfg, kind)
+                y = L.attention_layer(p["mixer"], acfg, h, impl=impl)
+                cache = L.prefill_kv_cache(p["mixer"], acfg, h, max_len)
+            x = x + y
+            if kind == "xattn":
+                h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+                ccfg = attn_cfg(cfg, kind, cross=True)
+                x = x + L.attention_layer(p["cross"], ccfg, h, kv_x=enc_out,
+                                          impl=impl)
+                _, xk, xv = L._project_qkv(p["cross"], ccfg, enc_out, enc_out)
+                cache = {**cache, "xk": xk, "xv": xv}
+            if "moe" in p:
+                h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+                y, _ = M.moe_ffn(p["moe"], h, cfg.moe)
+                x = x + y
+            elif "mlp" in p:
+                h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], h)
+            new_caches[f"l{i}"] = cache
+        return (x,), new_caches
+
+    (x,), caches = jax.lax.scan(
+        block_fn, (x,), params["blocks"],
+        unroll=cfg.num_super_blocks if unroll else 1)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def _mamba_prefill_cache(p, h, cfg: ModelConfig):
+    """Final SSM + conv state after a full-sequence mamba pass."""
+    spec = cfg.ssm
+    bsz, l, dm = h.shape
+    di = spec.d_inner(dm)
+    g, sdim = spec.num_groups, spec.state_dim
+    zxbcdt = h @ p["in_proj"]
+    _, xin, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * g * sdim],
+                               -1)
+    conv_in = jnp.concatenate([xin, bc], -1)
+    kw = spec.conv_width
+    conv_state = conv_in[:, -(kw - 1):, :]
+    if l < kw - 1:
+        conv_state = jnp.pad(conv_in, ((0, 0), (kw - 1 - l, 0), (0, 0)))
+    conv_out = jax.nn.silu(S._causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin2, b_mat, c_mat = jnp.split(conv_out, [di, di + g * sdim], -1)
+    nh = spec.num_heads(dm)
+    xh = xin2.reshape(bsz, l, nh, spec.head_dim)
+    b_mat = b_mat.reshape(bsz, l, g, sdim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    # state = sum_j exp(sum_{k>j} dt_k a) dt_j B_j x_j  — one pass, fp32
+    da = dtv * a
+    cum = jnp.cumsum(da, axis=1)
+    w = jnp.exp(cum[:, -1:, :] - cum)                      # (B,L,H)
+    bm = jnp.repeat(b_mat, nh // g, axis=2)
+    ssm = jnp.einsum("blh,blhs,blhp->bhps",
+                     w * dtv, bm.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    return {"conv": conv_state.astype(_dtype(cfg)), "ssm": ssm}

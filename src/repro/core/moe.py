@@ -1,0 +1,190 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based dispatch.
+
+Dispatch is the sort/scatter formulation (not the Switch dispatch-einsum,
+whose T x E*C x D cost is quadratic in tokens): tokens are argsorted by
+expert id, ranked within their expert, dropped beyond capacity, scattered
+into an (E, C, D) buffer, run through batched expert FFNs, and combined back
+weighted by their gate. Active FLOPs = 3 * 2 * k * T * D * F * cf — matching
+the 6*N_active*D roofline convention for MoE.
+
+EP: the expert axis of `w1/w2/w3` and the (E, C, D) buffers shard over
+'model' (see distributed/sharding.py); XLA SPMD turns the scatter/gather
+into an all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import _dense_init
+from repro.core.types import MoESpec
+
+Params = Dict[str, Any]
+
+
+_EP_MESH = None   # set by the launcher (same pattern as ops.set_context_parallel)
+
+
+def set_expert_parallel(mesh) -> None:
+    """Register the mesh the 'ep' dispatch shard_maps over. Explicit module
+    state: `jax.sharding.get_abstract_mesh()` does NOT reflect the legacy
+    `with mesh:` context, so ambient discovery silently no-ops (learned the
+    hard way — §Perf cell 1 it.3a)."""
+    global _EP_MESH
+    _EP_MESH = mesh
+
+
+def _ambient_mesh_with(axis: str):
+    """The registered (or ambient) mesh when it carries `axis`, else None."""
+    if _EP_MESH is not None and axis in _EP_MESH.axis_names:
+        return _EP_MESH
+    import jax.sharding as jsh
+    try:
+        mesh = jsh.get_abstract_mesh()
+        if mesh is not None and axis in mesh.axis_names:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def _constrain(x, *spec):
+    """Best-effort sharding constraint against the ambient mesh (no-op when
+    there is no mesh or the axes don't exist — single-device tests)."""
+    import jax.sharding as jsh
+    try:
+        mesh = jsh.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        if any(a is not None and a not in mesh.axis_names
+               for part in spec
+               for a in ((part,) if isinstance(part, (str, type(None)))
+                         else part)):
+            return x
+        return jax.lax.with_sharding_constraint(x, jsh.PartitionSpec(*spec))
+    except Exception:
+        return x
+
+
+def init_moe(key, d_model: int, d_ff: int, spec: MoESpec,
+             dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    e = spec.num_experts
+    return {
+        "router": _dense_init(ks[0], (d_model, e), dtype=jnp.float32),
+        "w1": _dense_init(ks[1], (e, d_model, d_ff), dtype=dtype),
+        "w3": _dense_init(ks[2], (e, d_model, d_ff), dtype=dtype),
+        "w2": _dense_init(ks[3], (e, d_ff, d_model), dtype=dtype),
+    }
+
+
+def moe_ffn(params: Params, x, spec: MoESpec, *,
+            capacity_factor: float = 1.25,
+            return_aux: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, D) -> (B, L, D), aux load-balancing loss (scalar fp32)."""
+    b, l, d = x.shape
+    e, k = spec.num_experts, spec.top_k
+    t = b * l
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)            # renormalize
+
+    if spec.dispatch == "dense":
+        out = _dense_combine(params, xf, gate_vals, expert_ids, e)
+        out = out.reshape(b, l, d)
+        if return_aux:
+            flat_e = expert_ids.reshape(-1)
+            frac = jnp.bincount(flat_e, length=e).astype(jnp.float32) / (t * k)
+            aux = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+            return out, aux
+        return out, jnp.zeros((), jnp.float32)
+
+    if spec.dispatch == "ep":
+        mesh = _ambient_mesh_with("model")
+        if mesh is not None and e % mesh.shape["model"] == 0:
+            from repro.core import moe_ep
+            return moe_ep.moe_ffn_ep(params, x, spec, mesh=mesh,
+                                     axis="model",
+                                     capacity_factor=capacity_factor,
+                                     return_aux=return_aux)
+        # single-device / indivisible: fall through to the sort schedule
+
+    # ---- sort-based dispatch ----
+    cap = int(max(k, min(t, round(t * k * capacity_factor / e))))
+    flat_e = expert_ids.reshape(-1)                             # (T*k,)
+    order = jnp.argsort(flat_e)                                 # stable
+    sorted_e = flat_e[order]
+    # rank of each routed token within its expert
+    counts = jnp.bincount(sorted_e, length=e)                   # (E,)
+    starts = jnp.cumsum(counts) - counts                        # (E,)
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    keep = rank < cap
+    src_token = order // k                                      # token index
+    rank_c = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[sorted_e, rank_c].add(
+        jnp.where(keep[:, None], xf[src_token], 0).astype(x.dtype))
+    # EP: keep the dispatch buffers expert-sharded — without the constraint
+    # XLA SPMD replicates the (E, C_global, D) buffers on every device
+    # (10.5 TB/device collective traffic at train_4k; §Perf cell 1 it.1)
+    buf = _constrain(buf, "model", None, None)
+
+    # ---- batched expert FFN ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w3"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w2"])         # (E, C, D)
+    y_buf = _constrain(y_buf, "model", None, None)
+
+    # ---- combine ----
+    gathered = y_buf[sorted_e, rank_c]                          # (T*k, D)
+    w = jnp.where(keep, gate_vals.reshape(-1)[order], 0.0)
+    out = jnp.zeros((t, d), jnp.float32).at[src_token].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    out = out.astype(x.dtype).reshape(b, l, d)
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    frac = jnp.bincount(flat_e, length=e).astype(jnp.float32) / (t * k)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    return (out, aux) if return_aux else (out, jnp.zeros((), jnp.float32))
+
+
+def _dense_combine(params: Params, xf, gate_vals, expert_ids, e):
+    """Tokens-stationary dispatch: every expert runs on every (local) token,
+    outputs combined by the sparse gate matrix. No sort, no scatter, no
+    capacity, no all-to-all — the only collective left is the FSDP gather of
+    the (small) expert weights. The (E, T_local, F) intermediate stays
+    token-sharded under SPMD because xf's token dim is sharded."""
+    t = xf.shape[0]
+    full_gates = jnp.zeros((t, e), jnp.float32).at[
+        jnp.arange(t)[:, None], expert_ids].set(gate_vals)      # (T, E)
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", xf, params["w1"]))
+    h = h * jnp.einsum("td,edf->etf", xf, params["w3"])
+    y = jnp.einsum("etf,efd->etd", h, params["w2"])             # (E, T, D)
+    out = jnp.einsum("te,etd->td", full_gates.astype(y.dtype), y)
+    return out.astype(xf.dtype)
+
+
+def moe_ffn_dense_ref(params: Params, x, spec: MoESpec):
+    """O(E) reference: compute every expert for every token, combine by the
+    (renormalized) top-k gates. Oracle for tests (no capacity drops)."""
+    b, l, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, spec.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    full_gates = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], expert_ids].set(gate_vals)
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", xf, params["w1"]))
+    h = h * jnp.einsum("td,edf->etf", xf, params["w3"])
+    y = jnp.einsum("etf,efd->etd", h, params["w2"])             # (E, T, D)
+    out = jnp.einsum("te,etd->td", full_gates, y.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(b, l, d)

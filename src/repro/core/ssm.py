@@ -1,0 +1,216 @@
+"""Mamba2 SSD (state-space duality) layer, chunked block form.
+
+The SSD dual form is structurally kin to SWAT's banded attention: within a
+chunk the computation is a (decay-masked) quadratic attention; across chunks
+a linear recurrence carries the (H, P, S) state — i.e. block-banded compute
+plus a running summary, which is why it slots into the same scan-over-blocks
+machinery (DESIGN.md §4).
+
+Shapes follow the Mamba2 paper: x (B, L, H, P); B̄,C (B, L, G, S) shared
+across H/G head groups; dt (B, L, H); A (H,) negative decay.
+
+`ssd_chunked` is the production path; `ssd_scan_ref` is the token-by-token
+recurrence oracle used in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import _dense_init, rmsnorm, init_rmsnorm
+from repro.core.types import SSMSpec
+
+Params = Dict[str, Any]
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, d_skip):
+    """Sequential recurrence oracle.
+    x: (B,L,H,P) dt: (B,L,H) a: (H,) b,c: (B,L,G,S) d: (H,).
+    state s: (B,H,P,S); s_t = exp(dt*a) s_{t-1} + dt * x ⊗ b; y = s · c + d*x
+    """
+    bsz, l, h, p = x.shape
+    g = b_mat.shape[2]
+    rep = h // g
+    bm = jnp.repeat(b_mat, rep, axis=2)  # (B,L,H,S)
+    cm = jnp.repeat(c_mat, rep, axis=2)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,H,S) (B,H,S)
+        decay = jnp.exp(dtt * a)[..., None, None]          # (B,H,1,1)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        s = s * decay + upd
+        y = jnp.einsum("bhps,bhs->bhp", s, ct)
+        return s, y
+
+    s0 = jnp.zeros((bsz, h, p, b_mat.shape[-1]), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+          cm.transpose(1, 0, 2, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)                            # (B,L,H,P)
+    return y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, chunk: int = 256):
+    """Chunked SSD. Same output as ssd_scan_ref, O(L * chunk) intra work +
+    O(L/chunk) sequential scan over chunk states."""
+    bsz, l, h, p = x.shape
+    g, s_dim = b_mat.shape[2], b_mat.shape[3]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+    rep = h // g
+
+    xf = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtf = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bf = b_mat.reshape(bsz, nc, chunk, g, s_dim).astype(jnp.float32)
+    cf = c_mat.reshape(bsz, nc, chunk, g, s_dim).astype(jnp.float32)
+    bf = jnp.repeat(bf, rep, axis=3)                        # (B,N,Q,H,S)
+    cf = jnp.repeat(cf, rep, axis=3)
+
+    da = dtf * a                                            # (B,N,Q,H)
+    cum = jnp.cumsum(da, axis=2)                            # inclusive
+    seg_total = cum[:, :, -1]                               # (B,N,H)
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) * (C_i·B_j) dt_j x_j
+    dmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,N,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(dmat), 0.0)
+    scores = jnp.einsum("bnqhs,bnkhs->bnqkh", cf, bf) * lmat
+    xbar = xf * dtf[..., None]                              # (B,N,Q,H,P)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", scores, xbar)
+
+    # chunk states: S_n = sum_j exp(seg_total - cum_j) dt_j B_j ⊗ x_j
+    w = jnp.exp(seg_total[:, :, None] - cum)                # (B,N,Q,H)
+    state_n = jnp.einsum("bnqh,bnqhs,bnqhp->bnhps", w, bf, xbar)
+
+    # inter-chunk recurrence over N
+    def step(s_prev, inp):
+        st, tot = inp                                       # (B,H,P,S) (B,H)
+        s_new = s_prev * jnp.exp(tot)[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, s_dim), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step, s0, (state_n.transpose(1, 0, 2, 3, 4),
+                   seg_total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)              # (B,N,H,P,S)
+
+    # inter-chunk contribution: y += exp(cum_i) * C_i · S_prev
+    y_inter = jnp.einsum("bnqhs,bnhps->bnqhp", cf * jnp.exp(cum)[..., None],
+                         s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, lp, h, p)[:, :l]
+    return y + d_skip[None, None, :, None] * x.reshape(bsz, lp, h, p)[:, :l]
+
+
+# ------------------------------------------------------------ full block ---
+
+def init_mamba(key, d_model: int, spec: SSMSpec, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 6)
+    di = spec.d_inner(d_model)
+    h = spec.num_heads(d_model)
+    g, s = spec.num_groups, spec.state_dim
+    conv_dim = di + 2 * g * s
+    return {
+        "in_proj": _dense_init(ks[0], (d_model,
+                                       2 * di + 2 * g * s + h), dtype=dtype),
+        "conv_w": _dense_init(ks[1], (spec.conv_width, conv_dim),
+                              scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "norm": init_rmsnorm(di),
+        "out_proj": _dense_init(ks[4], (di, d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """depthwise causal conv. x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def mamba_block(params: Params, x, spec: SSMSpec, *, chunk: int = 256):
+    """Full Mamba2 mixer. x: (B, L, Dm) -> (B, L, Dm)."""
+    bsz, l, dm = x.shape
+    di = spec.d_inner(dm)
+    h = spec.num_heads(dm)
+    g, s = spec.num_groups, spec.state_dim
+
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * g * s], -1)
+    conv_in = jnp.concatenate([xin, bc], -1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+    xin, b_mat, c_mat = jnp.split(conv_out, [di, di + g * s], -1)
+    xh = xin.reshape(bsz, l, h, spec.head_dim)
+    b_mat = b_mat.reshape(bsz, l, g, s)
+    c_mat = c_mat.reshape(bsz, l, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    y = ssd_chunked(xh, dt, a, b_mat, c_mat, params["d_skip"], chunk=chunk)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+# ------------------------------------------------------------ decode -------
+
+def init_mamba_cache(d_model: int, spec: SSMSpec, batch: int,
+                     dtype=jnp.bfloat16):
+    di = spec.d_inner(d_model)
+    h = spec.num_heads(d_model)
+    g, s = spec.num_groups, spec.state_dim
+    conv_dim = di + 2 * g * s
+    return {
+        "conv": jnp.zeros((batch, spec.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, spec.head_dim, s), jnp.float32),
+    }
+
+
+def mamba_decode(params: Params, x, cache, spec: SSMSpec):
+    """Single-token recurrent step. x: (B, 1, Dm). O(1) state — the SSM
+    counterpart of the ring KV cache."""
+    bsz, _, dm = x.shape
+    di = spec.d_inner(dm)
+    h = spec.num_heads(dm)
+    g, s = spec.num_groups, spec.state_dim
+
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xin, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * g * s], -1)
+    conv_in = jnp.concatenate([xin, bc], -1)                # (B, C)
+    window = jnp.concatenate([cache["conv"],
+                              conv_in[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xin, b_mat, c_mat = jnp.split(conv_out, [di, di + g * s], -1)
+    xh = xin.reshape(bsz, h, spec.head_dim)
+    b_mat = jnp.repeat(b_mat.reshape(bsz, g, s), h // g, axis=1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, g, s), h // g, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    decay = jnp.exp(dt * a)[..., None, None]                # (B,H,1,1)
+    upd = (dt[..., None] * xh)[..., None] * b_mat[:, :, None, :]
+    ssm = cache["ssm"] * decay + upd
+    y = jnp.einsum("bhps,bhs->bhp", ssm, c_mat)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None, :]))
+    new_cache = {"conv": window[:, 1:], "ssm": ssm}
+    return y @ params["out_proj"], new_cache

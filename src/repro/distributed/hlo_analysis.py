@@ -1,0 +1,145 @@
+"""Post-compile HLO analysis: collective bytes + the three roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes but no collective traffic, so we
+parse the optimized (SPMD-partitioned, per-device) HLO text and sum the
+result-shape bytes of every collective op. Shapes in the partitioned module
+are already per-device, so the terms below are per-chip seconds directly.
+
+Per-op byte factors (ring-algorithm wire bytes per participating chip,
+(n-1)/n ~ 1 at n=16..512):
+  all-reduce        2x result   (reduce-scatter + all-gather phases)
+  all-gather        1x result
+  reduce-scatter    1x operand  (= result * n; we use result * shards)
+  all-to-all        1x result
+  collective-permute 1x result
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]   # raw result bytes (per device)
+    wire_bytes: float               # factor-weighted bytes (per device)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, int] = {}
+    wire = 0.0
+    factors = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_str)
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        wire += factors[kind] * b
+    return CollectiveStats(counts=counts, bytes_by_kind=by_kind,
+                           wire_bytes=wire)
+
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (we charge one link, worst-case)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                # per device
+    bytes_accessed: float       # per device
+    collective_bytes: float     # per device, factor-weighted
+    model_flops: float          # 6ND / 2ND (per device share)
+    counts: Dict[str, int]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline actually achieved if the chip
+        runs at the dominant-term rate: (useful compute time) / (bound)."""
+        ideal = self.model_flops / PEAK_FLOPS_BF16
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops_per_device": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_counts": self.counts,
+        }
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats,
+                   model_flops_per_device: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=coll.wire_bytes / ICI_BW,
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        collective_bytes=coll.wire_bytes,
+        model_flops=model_flops_per_device,
+        counts=coll.counts,
+    )

@@ -1,0 +1,44 @@
+"""Mixed-precision matmul helper.
+
+TPU MXUs compute bf16 x bf16 -> f32 natively (no fp32 copies of the
+operands), which is what the kernels and the roofline assume. The CPU
+backend can COMPILE that combination (the dry-run only lowers+compiles) but
+cannot EXECUTE it — so execution paths on CPU upcast instead.
+
+  native_mixed_dot(True)   dry-run lowering: keep operands bf16,
+                           preferred_element_type=f32 (TPU semantics)
+  native_mixed_dot(False)  CPU execution (tests/examples): upcast to f32
+
+Default: native on TPU, upcast elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NATIVE = jax.default_backend() == "tpu"
+
+
+def native_mixed_dot(value: bool) -> None:
+    global _NATIVE
+    _NATIVE = value
+
+
+def einsum_f32(subscripts: str, a, b):
+    """einsum with fp32 accumulation, without fp32 operand copies when the
+    backend supports mixed dots."""
+    if _NATIVE or a.dtype == jnp.float32:
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def dot_general_f32(a, b, dimension_numbers):
+    if _NATIVE or a.dtype == jnp.float32:
+        return jax.lax.dot_general(a, b, dimension_numbers,
+                                   preferred_element_type=jnp.float32)
+    return jax.lax.dot_general(a.astype(jnp.float32),
+                               b.astype(jnp.float32), dimension_numbers,
+                               preferred_element_type=jnp.float32)

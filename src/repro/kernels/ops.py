@@ -1,0 +1,285 @@
+"""Public attention ops: jit-ready, differentiable, implementation-switched.
+
+Implementations (impl=):
+  pallas  - the SWAT Pallas kernels (custom_vjp; interpret mode on CPU).
+            The TPU hot path.
+  xla     - block-banded scan implementation. Same exact-band FLOPs as the
+            Pallas kernel, pure jax.lax, natively differentiable and SPMD-
+            partitionable: this is what the multi-pod dry-run lowers, so
+            cost_analysis reflects banded compute without interpret-mode
+            loop artifacts.
+  sliding_chunks - the HuggingFace Longformer baseline (paper's comparison
+            target, ~50% redundant FLOPs).
+  ref     - O(N^2) masked reference (tests, tiny shapes).
+
+Global tokens (Longformer) are composed here: the band+global-column kernel
+covers every non-global row; a second dense pass over the first g rows
+replaces their output — the TPU analogue of SWAT's dedicated global
+attention cores. Autodiff flows through both passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns
+from repro.core.types import AttentionSpec
+from repro.kernels import dots
+from repro.kernels import ref as ref_impl
+from repro.kernels import swat_attention as fwd_mod
+from repro.kernels import swat_backward as bwd_mod
+
+NEG_INF = fwd_mod.NEG_INF
+
+
+@functools.lru_cache(maxsize=512)
+def get_pattern(spec: AttentionSpec, seq_q: int, seq_kv: int,
+                block_q: int, block_kv: int) -> patterns.BlockPattern:
+    return patterns.build_block_pattern(spec, seq_q, seq_kv, block_q, block_kv)
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Pallas primitive with custom VJP (one block pattern)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _pallas_attention(q, k, v, spec, pattern, scale, interpret):
+    out, _ = _pallas_fwd(q, k, v, spec, pattern, scale, interpret)
+    return out
+
+
+def _pallas_fwd(q, k, v, spec, pattern, scale, interpret):
+    out, lse = fwd_mod.swat_attention_fwd(
+        q, k, v, spec, pattern=pattern, scale=scale, interpret=interpret,
+        return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _pallas_bwd(spec, pattern, scale, interpret, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = bwd_mod.swat_attention_bwd(
+        q, k, v, out, lse, do, spec, pattern=pattern, scale=scale,
+        interpret=interpret)
+    return dq, dk, dv
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+# --------------------------------------------------------------------------
+# XLA block-banded implementation (scan over q blocks)
+# --------------------------------------------------------------------------
+
+def _xla_dense(q, k, v, spec, scale):
+    """Plain masked attention — the honest O(N^2) dense cost (the paper's
+    GPU baseline). Used for dense specs so HLO FLOPs/bytes reflect true
+    dense attention (flash-streaming is the Pallas kernel's job on TPU)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    group = hq // hkv
+    qb = q.reshape(b, hkv, group, lq, d) * jnp.asarray(scale, q.dtype)
+    # mixed-precision dots with fp32 accumulation: no fp32 COPIES of K/V
+    # (those double HBM traffic and dominate the convert-op flop count)
+    s = dots.einsum_f32("bhgld,bhkd->bhglk", qb, k)
+    if spec.softcap:
+        s = spec.softcap * jnp.tanh(s / spec.softcap)
+    if spec.causal:
+        mask = (jnp.arange(lkv)[None, :] <= jnp.arange(lq)[:, None])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    den = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    o = dots.einsum_f32("bhglk,bhkd->bhgld", (p / den).astype(v.dtype), v)
+    return o.reshape(b, hq, lq, d).astype(q.dtype)
+
+
+def _xla_banded(q, k, v, spec, pattern, scale, *, q_shift: int = 0,
+                kv_lo=None, kv_hi=None, return_partials: bool = False):
+    """Vectorized exact-band attention: every q block gathers only its slot
+    kv blocks — O(N * band) compute AND memory, no loop (so HLO cost
+    analysis counts every FLOP; lax.scan bodies are counted once).
+
+    Context-parallel hooks (all default to the plain single-buffer case):
+      q_shift          - constant local-coordinate shift: q row i aligns with
+                         kv row i + q_shift (the kv buffer carries a halo
+                         prefix of q_shift rows). The pattern must be built
+                         with the same q_shift. Static int.
+      kv_lo / kv_hi    - valid kv half-open range in LOCAL coordinates. May
+                         be traced scalars (per-shard edge masking inside
+                         shard_map). Defaults: [0, pattern.seq_kv).
+      return_partials  - return the flash state (acc, l, m) with
+                         acc (B,H,L,D) fp32 unnormalized, l/m (B,H,L) fp32,
+                         for cross-pass / cross-device logsumexp merging.
+    """
+    if not spec.is_sparse:
+        assert q_shift == 0 and not return_partials
+        return _xla_dense(q, k, v, spec, scale)
+    if (q_shift == 0 and not return_partials and spec.num_random == 0
+            and spec.window >= k.shape[2]
+            and (spec.causal or spec.window >= q.shape[2])):
+        # degenerate window (w >= seq): the band covers everything, but the
+        # banded gather would still duplicate ~the whole KV once per q block
+        # (nq x KV bytes — the gemma2 train_4k memory blow-up, §Perf cell 3
+        # it.3). Fall through to the plain dense path instead.
+        return _xla_dense(q, k, v, spec, scale)
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    group = hq // hkv
+    bq, bk = pattern.block_q, pattern.block_kv
+    nq, ns = pattern.num_q_blocks, pattern.num_slots
+    lq_pad = nq * bq
+    if lq_pad != lq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0)))
+    lkv_pad = pattern.num_kv_blocks * bk
+    if lkv_pad != lkv:
+        pad = ((0, 0), (0, 0), (0, lkv_pad - lkv), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    if kv_lo is None:
+        kv_lo = 0
+    if kv_hi is None:
+        kv_hi = pattern.seq_kv
+
+    qb = q.reshape(b, hkv, group, nq, bq, d)
+    kv_map = jnp.asarray(pattern.kv_block_map)        # (nq, ns)
+    kinds = jnp.asarray(pattern.slot_kinds)           # (nq, ns)
+
+    # gather all (nq, ns*bk) kv rows at once
+    flat = (kv_map[:, :, None] * bk
+            + jnp.arange(bk, dtype=jnp.int32)[None, None, :]
+            ).reshape(nq, ns * bk)                    # (nq, S)
+    kg = jnp.take(k, flat.reshape(-1), axis=2).reshape(
+        b, hkv, nq, ns * bk, d)
+    vg = jnp.take(v, flat.reshape(-1), axis=2).reshape(
+        b, hkv, nq, ns * bk, d)
+
+    s = dots.einsum_f32("bhgnqd,bhnkd->bhgnqk",
+                        qb * jnp.asarray(scale, q.dtype), kg)
+    if spec.softcap:
+        s = spec.softcap * jnp.tanh(s / spec.softcap)
+
+    q_idx = ((jnp.arange(nq)[:, None] * bq
+              + jnp.arange(bq)[None, :])[:, :, None]
+             + q_shift)                               # (nq, bq, 1)
+    k_idx = flat[:, None, :]                          # (nq, 1, S)
+    full = jnp.repeat(kinds, bk, axis=1)[:, None, :]  # (nq, 1, S)
+    mask = (k_idx >= kv_lo) & (k_idx < kv_hi) & (full != patterns.PAD)
+    band = k_idx >= q_idx - spec.window
+    if not spec.causal:
+        band &= k_idx <= q_idx + spec.window
+    allowed = band
+    if spec.num_global:
+        allowed |= k_idx < spec.num_global
+    if spec.num_random:
+        allowed |= (full == patterns.RANDOM)
+    mask &= allowed
+    if spec.causal:
+        mask &= k_idx <= q_idx
+
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    if return_partials:
+        acc = dots.einsum_f32("bhgnqk,bhnkd->bhgnqd", p.astype(v.dtype), vg)
+        acc = acc.astype(jnp.float32).reshape(b, hq, lq_pad, d)[:, :, :lq]
+        l = jnp.sum(p, -1).reshape(b, hq, lq_pad)[:, :, :lq]
+        mm = m[..., 0].reshape(b, hq, lq_pad)[:, :, :lq]
+        return acc, l, mm
+    den = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    o = dots.einsum_f32("bhgnqk,bhnkd->bhgnqd", (p / den).astype(v.dtype),
+                        vg)
+    o = o.astype(q.dtype).reshape(b, hq, lq_pad, d)
+    return o[:, :, :lq]
+
+
+# --------------------------------------------------------------------------
+# Context-parallel dispatch (set by the launcher / dry-run, not per-call:
+# the model stack stays signature-stable while the distribution strategy
+# changes underneath — the same pattern as native_mixed_dot)
+# --------------------------------------------------------------------------
+
+_CP_CTX: Optional[tuple] = None   # (mesh, axis) | None
+
+
+def set_context_parallel(mesh, axis: str = "model") -> None:
+    """Enable halo-exchange context parallelism for every eligible
+    swat_attention call (sparse spec, no random blocks, seq divisible by the
+    axis with shards wider than the window's halo usefulness)."""
+    global _CP_CTX
+    _CP_CTX = (mesh, axis) if mesh is not None else None
+
+
+def _cp_eligible(spec: AttentionSpec, lq: int, lkv: int) -> bool:
+    if _CP_CTX is None or not spec.is_sparse or spec.num_random:
+        return False
+    mesh, axis = _CP_CTX
+    n = mesh.shape[axis]
+    return (lq == lkv and lq % n == 0 and lq // n >= 128
+            and spec.num_global <= lq // n)
+
+
+# --------------------------------------------------------------------------
+# Public entry point
+# --------------------------------------------------------------------------
+
+def swat_attention(q, k, v, spec: AttentionSpec, *,
+                   block_q: int = 128, block_kv: int = 128,
+                   scale: Optional[float] = None,
+                   impl: str = "pallas",
+                   interpret: Optional[bool] = None):
+    """Fused window/global/random attention. q: (B, Hq, Lq, D);
+    k, v: (B, Hkv, Lkv, D). Differentiable for all impls."""
+    b, hq, lq, d = q.shape
+    lkv = k.shape[2]
+    scale = float(d ** -0.5 if scale is None else scale)
+    interpret = default_interpret() if interpret is None else interpret
+
+    if _cp_eligible(spec, lq, lkv):
+        from repro.distributed import context_parallel as CP
+        mesh, axis = _CP_CTX
+        return CP.swat_attention_context_parallel(
+            q, k, v, spec, mesh=mesh, axis=axis,
+            block_q=block_q, block_kv=block_kv, scale=scale)
+
+    if impl == "ref":
+        pat = get_pattern(spec, lq, lkv, block_q, block_kv)
+        return ref_impl.attention_ref(q, k, v, spec, pattern=pat, scale=scale)
+    if impl == "sliding_chunks":
+        return ref_impl.sliding_chunks_ref(q, k, v, spec, scale=scale)
+    assert impl in ("pallas", "xla"), impl
+
+    pat = get_pattern(spec, lq, lkv, block_q, block_kv)
+    if impl == "pallas":
+        out = _pallas_attention(q, k, v, spec, pat, scale, interpret)
+    else:
+        out = _xla_banded(q, k, v, spec, pat, scale)
+
+    g = spec.num_global
+    if spec.is_sparse and g > 0:
+        # dense pass for global rows (paper §4.1's pinned global cores)
+        gspec = dataclasses.replace(spec, kind="dense", window=0,
+                                    num_global=0, num_random=0)
+        gpat = get_pattern(gspec, g, lkv, block_q, block_kv)
+        qg = q[:, :, :g]
+        if impl == "pallas":
+            og = _pallas_attention(qg, k, v, gspec, gpat, scale, interpret)
+        else:
+            og = _xla_banded(qg, k, v, gspec, gpat, scale)
+        out = jnp.concatenate([og, out[:, :, g:]], axis=2)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
+                     scale: Optional[float] = None):
+    """One-token decode vs a (ring) KV cache — XLA path used by serve_step.
+    The Pallas decode kernel (swat_decode.py) is the TPU hot-spot variant."""
+    return ref_impl.decode_ref(q, k_cache, v_cache, cache_len, spec,
+                               scale=scale)

@@ -1,0 +1,183 @@
+"""Pure-jnp oracles for every kernel. O(N^2) — tests and small shapes only.
+
+Three reference implementations matter to the paper:
+  attention_ref       - the standard 3-step QK / softmax / SV computation
+  fused_attention_ref - the paper's Eq. 1 rewrite (exp, SV, divide-at-end);
+                        proving attention_ref == fused_attention_ref is the
+                        paper's kernel-fusion correctness claim
+  sliding_chunks_ref  - the HuggingFace Longformer baseline the paper beats
+                        (dense 2w-wide chunks, ~50% redundant FLOPs)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+from repro.core.types import AttentionSpec
+
+
+def _soft_cap(s, cap: float):
+    return cap * jnp.tanh(s / cap) if cap else s
+
+
+def attention_ref(q, k, v, spec: AttentionSpec, *,
+                  pattern: Optional[patterns.BlockPattern] = None,
+                  scale: Optional[float] = None):
+    """Masked softmax attention, standard 3-step form, fp32 math.
+
+    q: (B, Hq, Lq, D), k/v: (B, Hkv, Lk, D). GQA by head repetition.
+    The mask comes from the *pattern* when given (includes random blocks),
+    else from the dense spec mask.
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if pattern is not None:
+        mask = patterns.random_blocks_mask(pattern)
+    else:
+        mask = patterns.dense_mask(spec, lq, k.shape[2])
+    mask = jnp.asarray(mask)[None, None]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _soft_cap(s, spec.softcap)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)  # rows with no valid kv produce 0, not NaN
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def fused_attention_ref(q, k, v, spec: AttentionSpec, *,
+                        pattern: Optional[patterns.BlockPattern] = None,
+                        scale: Optional[float] = None,
+                        stabilize: bool = True):
+    """Paper Eq. 1: Z_i = (1/sum_l exp(S_il)) * sum_n exp(S_in) V_n.
+
+    With stabilize=False this is the paper's literal formulation (no max
+    subtraction — overflows for large |S|, as on their FPGA it did not at
+    fp16 scale). stabilize=True subtracts the row max first (our deviation,
+    mathematically identical)."""
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if pattern is not None:
+        mask = patterns.random_blocks_mask(pattern)
+    else:
+        mask = patterns.dense_mask(spec, lq, k.shape[2])
+    mask = jnp.asarray(mask)[None, None]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _soft_cap(s, spec.softcap)
+    s = jnp.where(mask, s, -jnp.inf)
+    if stabilize:
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        e = jnp.where(mask, jnp.exp(s - m), 0.0)
+    else:
+        e = jnp.where(mask, jnp.exp(s), 0.0)
+    num = jnp.einsum("bhqk,bhkd->bhqd", e, v.astype(jnp.float32))
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    return (num / jnp.maximum(den, 1e-30)).astype(q.dtype)
+
+
+def sliding_chunks_ref(q, k, v, spec: AttentionSpec, *,
+                       scale: Optional[float] = None):
+    """HF Longformer 'sliding chunks': split the sequence into chunks of 2w,
+    compute *dense* attention of every chunk against [itself, next chunk]
+    (bidirectional also previous), mask to the band afterwards. The overlap
+    regions are the paper's ~50% wasted FLOPs. Exact same output as
+    attention_ref with the band mask; only the compute schedule differs.
+
+    Requires seq divisible by 2w. num_global/num_random unsupported (as in
+    HF's kernel — globals are a separate dense pass there too).
+    """
+    assert spec.kind in ("swat", "sliding_chunks")
+    w = spec.window
+    c = 2 * w
+    b, h, l, d = q.shape
+    assert l % c == 0, f"sliding_chunks needs seq % {c} == 0, got {l}"
+    hkv = k.shape[1]
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    n = l // c
+    qc = q.reshape(b, h, n, c, d).astype(jnp.float32)
+    kc = k.reshape(b, h, n, c, d).astype(jnp.float32)
+    vc = v.reshape(b, h, n, c, d).astype(jnp.float32)
+
+    def neigh(x, shift):  # chunk at offset `shift`, zero-padded at the ends
+        pad = jnp.zeros_like(x[:, :, :1])
+        if shift == -1:
+            return jnp.concatenate([pad, x[:, :, :-1]], axis=2)
+        if shift == 1:
+            return jnp.concatenate([x[:, :, 1:], pad], axis=2)
+        return x
+
+    shifts = (-1, 0) if spec.causal else (-1, 0, 1)
+    ks = jnp.concatenate([neigh(kc, s) for s in shifts], axis=3)
+    vs = jnp.concatenate([neigh(vc, s) for s in shifts], axis=3)
+    s_ = jnp.einsum("bhncd,bhnkd->bhnck", qc, ks) * scale
+    s_ = _soft_cap(s_, spec.softcap)
+
+    # band mask in chunk coordinates
+    q_idx = np.arange(c)[:, None]
+    k_off = np.concatenate([np.arange(c) + s * c for s in shifts])[None, :]
+    band = (k_off >= q_idx - w) & ((k_off <= q_idx) if spec.causal
+                                   else (k_off <= q_idx + w))
+    valid = np.ones((len(shifts) * c,), bool)[None, :]
+    mask = jnp.asarray(band & valid)[None, None, None]
+    # first/last chunk: padded neighbours are invalid
+    chunk_ids = jnp.arange(n)[:, None, None]
+    pad_lo = (jnp.asarray(k_off) < 0)[None] & (chunk_ids == 0)
+    pad_hi = (jnp.asarray(k_off) >= c)[None] & (chunk_ids == n - 1)
+    mask = mask & ~pad_lo[None, None] & ~pad_hi[None, None]
+
+    s_ = jnp.where(mask, s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhnck,bhnkd->bhncd", p, vs)
+    return out.reshape(b, h, l, d).astype(q.dtype)
+
+
+def decode_ref(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
+               scale: Optional[float] = None):
+    """One-token decode against a (ring) cache. q: (B, Hq, 1, D),
+    caches: (B, Hkv, W, D). Only the first min(cache_len, W) entries are
+    valid. Ring order is irrelevant (softmax is permutation invariant).
+
+    Numerics note: scores come from a mixed-precision dot_general with fp32
+    accumulation — never from an fp32 *copy* of the cache. Materializing
+    `k_cache.astype(f32)` doubles decode HBM traffic and shows up as a
+    convert-op FLOP avalanche in the roofline (EXPERIMENTS.md §Perf it.1)."""
+    b, hq, _, d = q.shape
+    hkv, wcap = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, group, d)
+    # (B, Hkv, G, W) <- (B, Hkv, G, D) x (B, Hkv, W, D), fp32 accumulate
+    from repro.kernels import dots
+    s = dots.dot_general_f32(
+        qg, k_cache, (((3,), (3,)), ((0, 1), (0, 1)))) * scale
+    s = _soft_cap(s, spec.softcap)
+    valid = (jnp.arange(wcap)[None, None, None, :]
+             < jnp.minimum(cache_len.reshape(b, 1, 1, 1), wcap))
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    out = dots.dot_general_f32(
+        p.astype(v_cache.dtype), v_cache,
+        (((3,), (2,)), ((0, 1), (0, 1))))          # (B, Hkv, G, D)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

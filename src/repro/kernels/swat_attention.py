@@ -1,0 +1,216 @@
+"""SWAT forward kernel: fused, exact-band, block-sparse window attention.
+
+TPU adaptation of the paper's design (DESIGN.md §2):
+  * exact-band compute     -> the grid's slot axis visits only the kv blocks
+                              in the band (plus global/random blocks), driven
+                              by a scalar-prefetched block map.
+  * kernel fusion (Eq. 1)  -> QK^T, exp and the V accumulation happen in one
+                              kernel; S/S' never leave VMEM; the denominator
+                              divides once, at the last slot.
+  * row-major dataflow     -> q-block-major grid order; consecutive q blocks
+                              share all but one band kv block, so Pallas's
+                              block pipeline re-fetches ~one K/V block per q
+                              row of blocks (the FIFO's "load once").
+  * input-stationary       -> inverted to output-stationary (MXU): the Z tile
+                              accumulates in VMEM scratch across slots.
+
+Numerics: fp32 accumulation, flash-style running max (deviation from the
+paper's raw exp; see DESIGN.md §6). Masks use -1e30, not -inf, so fully
+masked PAD slots contribute exactly 0 without NaN paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import patterns
+from repro.core.types import AttentionSpec
+
+NEG_INF = -1e30
+LANES = 128  # TPU lane width: m/l scratch is (BQ, LANES) with col-0 live
+
+
+def element_mask(spec: AttentionSpec, q_idx, k_idx, seq_kv, kind):
+    """Per-element visibility for one (q_block, kv_block) tile.
+
+    band | global-columns | random-slot, then AND'd with causality and kv
+    bounds. `kind` is the slot kind (PAD handled by the caller's pl.when;
+    RANDOM slots get whole-block visibility, matching BigBird's block-random
+    pattern). q_idx/k_idx are GLOBAL token coordinates — context parallelism
+    passes shard-offset indices, so halo rows that fall before the sequence
+    start (k_idx < 0 on the leftmost shard) mask out here."""
+    mask = (k_idx < seq_kv) & (k_idx >= 0)
+    if spec.is_sparse:
+        band = k_idx >= q_idx - spec.window
+        if not spec.causal:
+            band &= k_idx <= q_idx + spec.window
+        allowed = band
+        if spec.num_global:
+            allowed |= k_idx < spec.num_global
+        if spec.num_random:
+            allowed |= jnp.full_like(band, kind == patterns.RANDOM)
+        mask &= allowed
+    if spec.causal:
+        mask &= k_idx <= q_idx
+    return mask
+
+
+def _attention_fwd_kernel(
+    # scalar prefetch
+    kv_map_ref, kinds_ref,
+    # inputs
+    q_ref, k_ref, v_ref,
+    # outputs
+    o_ref, lse_ref,
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, spec: AttentionSpec, block_q: int, block_kv: int,
+    seq_q: int, seq_kv: int, num_slots: int, scale: float,
+    q_offset: int = 0, kv_offset: int = 0,
+):
+    i = pl.program_id(2)   # q block
+    s = pl.program_id(3)   # kv slot
+    kind = kinds_ref[i, s]
+    j = kv_map_ref[i, s]
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kind != patterns.PAD)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (BK, D)
+        st = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (BQ, BK)
+        if spec.softcap:
+            st = spec.softcap * jnp.tanh(st / spec.softcap)
+
+        q_idx = q_offset + i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        k_idx = kv_offset + j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = element_mask(spec, q_idx, k_idx, seq_kv, kind)
+        st = jnp.where(mask, st, NEG_INF)
+
+        m_prev = m_ref[:, :1]                             # (BQ, 1)
+        m_cur = jnp.max(st, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(st - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)               # (BK, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (BQ, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(s == num_slots - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)
+                       ).astype(o_ref.dtype)
+        # logsumexp per row, saved for the backward pass
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+                         ).astype(jnp.float32)
+
+
+def swat_attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, spec: AttentionSpec, *,
+    pattern: Optional[patterns.BlockPattern] = None,
+    block_q: int = 128, block_kv: int = 128,
+    scale: Optional[float] = None, interpret: bool = False,
+    return_lse: bool = False,
+    q_offset: int = 0, kv_offset: int = 0,
+    seq_kv_bound: Optional[int] = None,
+):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D). Returns (B, Hq, Lq, D)
+    (and row logsumexp (B, Hq, Lq) when return_lse).
+
+    q_offset/kv_offset: global token coordinates of q[...,0,:] / k[...,0,:]
+    (context parallelism — the mask sees global indices). seq_kv_bound: the
+    GLOBAL kv length (defaults to kv_offset + Lkv, i.e. this buffer ends the
+    sequence)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(d ** -0.5 if scale is None else scale)
+    if seq_kv_bound is None:
+        seq_kv_bound = kv_offset + lkv
+    if pattern is None:
+        pattern = patterns.build_block_pattern(
+            spec, lq, lkv, block_q, block_kv, q_shift=q_offset - kv_offset)
+    block_q, block_kv = pattern.block_q, pattern.block_kv
+    nq, num_slots = pattern.num_q_blocks, pattern.num_slots
+
+    # pad sequence dims to block multiples (mask handles kv bounds; padded q
+    # rows are truncated below)
+    lq_pad, lkv_pad = nq * block_q, pattern.num_kv_blocks * block_kv
+    if lq_pad != lq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0)))
+    if lkv_pad != lkv:
+        pad = ((0, 0), (0, 0), (0, lkv_pad - lkv), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+
+    grid = (b, hq, nq, num_slots)
+    kv_map = jnp.asarray(pattern.kv_block_map)
+    kinds = jnp.asarray(pattern.slot_kinds)
+
+    kernel = functools.partial(
+        _attention_fwd_kernel, spec=spec, block_q=block_q, block_kv=block_kv,
+        seq_q=lq, seq_kv=seq_kv_bound, num_slots=num_slots, scale=scale,
+        q_offset=q_offset, kv_offset=kv_offset)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, i, s, bm, km: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, s, bm, km: (bb, h // group,
+                                                      bm[i, s], 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, s, bm, km: (bb, h // group,
+                                                      bm[i, s], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, i, s, bm, km: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, LANES),
+                         lambda bb, h, i, s, bm, km: (bb, h, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, lq_pad, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, lq_pad, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+        name="swat_attention_fwd",
+    )(kv_map, kinds, q, k, v)
+    out = out[:, :, :lq]
+    if return_lse:
+        return out, lse[:, :, :lq, 0]
+    return out

@@ -1,0 +1,238 @@
+"""SWAT backward kernels: banded flash-attention gradients.
+
+Two kernels, both driven by the same trace-time block pattern as the forward:
+  dQ    - grid (B, Hq, q_block, slot): same schedule as forward.
+  dK/dV - grid (B, Hq, kv_block, inv_slot): the *inverse* pattern (per kv
+          block, the q blocks that touch it) — pure-numpy inversion, see
+          patterns.BlockPattern.inverse().
+
+GQA: dK/dV are produced per q-head and group-summed outside (keeps every
+output block visited by exactly one grid step, so no cross-step races).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import patterns
+from repro.core.types import AttentionSpec
+
+from repro.kernels.swat_attention import LANES, NEG_INF
+
+
+def _scores(q, k, scale, softcap):
+    """Recompute the (capped) score block in fp32. Returns (s, ds_chain)
+    where ds_chain is the d(capped)/d(raw) factor (None when no cap)."""
+    s = jax.lax.dot_general(q.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap:
+        t = jnp.tanh(s / softcap)
+        return softcap * t, (1.0 - t * t)
+    return s, None
+
+
+def _block_mask(spec, i, j, block_q, block_kv, seq_kv, kind,
+                q_offset=0, kv_offset=0):
+    q_idx = q_offset + i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_idx = kv_offset + j * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    from repro.kernels.swat_attention import element_mask
+    return element_mask(spec, q_idx, k_idx, seq_kv, kind)
+
+
+def _dq_kernel(kv_map_ref, kinds_ref,
+               q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_acc,
+               *, spec, block_q, block_kv, seq_kv, num_slots, scale,
+               q_offset=0, kv_offset=0):
+    i = pl.program_id(2)
+    s = pl.program_id(3)
+    kind = kinds_ref[i, s]
+    j = kv_map_ref[i, s]
+
+    @pl.when(s == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    @pl.when(kind != patterns.PAD)
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0].astype(jnp.float32)
+        st, chain = _scores(q, k, scale, spec.softcap)
+        mask = _block_mask(spec, i, j, block_q, block_kv, seq_kv, kind,
+                           q_offset, kv_offset)
+        st = jnp.where(mask, st, NEG_INF)
+        lse = lse_ref[0, 0][:, :1]                       # (BQ, 1)
+        p = jnp.exp(st - lse)                            # (BQ, BK)
+        do = do_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        delta = delta_ref[0, 0][:, :1]                   # (BQ, 1)
+        ds = p * (dp - delta)
+        if chain is not None:
+            ds = ds * chain
+        ds = jnp.where(mask, ds, 0.0)
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    @pl.when(s == num_slots - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_map_ref, kinds_ref,
+                q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc,
+                *, spec, block_q, block_kv, seq_kv, num_slots, scale,
+                q_offset=0, kv_offset=0):
+    j = pl.program_id(2)   # kv block
+    s = pl.program_id(3)   # q slot
+    kind = kinds_ref[j, s]
+    i = q_map_ref[j, s]
+
+    @pl.when(s == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(kind != patterns.PAD)
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0].astype(jnp.float32)
+        st, chain = _scores(q, k, scale, spec.softcap)    # (BQ, BK)
+        mask = _block_mask(spec, i, j, block_q, block_kv, seq_kv, kind,
+                           q_offset, kv_offset)
+        st = jnp.where(mask, st, NEG_INF)
+        lse = lse_ref[0, 0][:, :1]
+        p = jnp.exp(st - lse)                             # (BQ, BK)
+        do = do_ref[0, 0].astype(jnp.float32)             # (BQ, D)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        delta = delta_ref[0, 0][:, :1]
+        ds = p * (dp - delta)
+        if chain is not None:
+            ds = ds * chain
+        ds = jnp.where(mask, ds, 0.0)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q.astype(jnp.float32),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BK, D)
+
+    @pl.when(s == num_slots - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def swat_attention_bwd(q, k, v, o, lse, do, spec: AttentionSpec, *,
+                       pattern: patterns.BlockPattern,
+                       scale: Optional[float] = None,
+                       interpret: bool = False,
+                       q_offset: int = 0, kv_offset: int = 0,
+                       seq_kv_bound: Optional[int] = None):
+    """Returns (dq, dk, dv). q/do: (B,Hq,Lq,D); k/v: (B,Hkv,Lkv,D);
+    lse: (B,Hq,Lq) fp32. Offsets: global coordinates (context parallelism),
+    matching the forward call."""
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    group = hq // hkv
+    scale = float(d ** -0.5 if scale is None else scale)
+    if seq_kv_bound is None:
+        seq_kv_bound = kv_offset + lkv
+    block_q, block_kv = pattern.block_q, pattern.block_kv
+    nq, num_slots = pattern.num_q_blocks, pattern.num_slots
+    nkv = pattern.num_kv_blocks
+
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    lq_pad, lkv_pad = nq * block_q, nkv * block_kv
+    if lq_pad != lq:
+        pad4 = ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0))
+        pad3 = ((0, 0), (0, 0), (0, lq_pad - lq))
+        q, do = jnp.pad(q, pad4), jnp.pad(do, pad4)
+        lse = jnp.pad(lse, pad3, constant_values=0.0)
+        delta = jnp.pad(delta, pad3)
+    if lkv_pad != lkv:
+        pad = ((0, 0), (0, 0), (0, lkv_pad - lkv), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+
+    # (B,H,L) rows -> (B,H,L,LANES) so lse/delta blocks are 2D VMEM tiles
+    lse_t = jnp.broadcast_to(lse[..., None], lse.shape + (LANES,))
+    delta_t = jnp.broadcast_to(delta[..., None], delta.shape + (LANES,))
+
+    kwargs = dict(spec=spec, block_q=block_q, block_kv=block_kv,
+                  seq_kv=seq_kv_bound, scale=scale,
+                  q_offset=q_offset, kv_offset=kv_offset)
+
+    # ---- dQ ----
+    kv_map = jnp.asarray(pattern.kv_block_map)
+    kinds = jnp.asarray(pattern.slot_kinds)
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda bb, h, i, s, bm, km: (bb, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_kv, d),
+                           lambda bb, h, i, s, bm, km: (bb, h // group,
+                                                        bm[i, s], 0))
+    row_spec = pl.BlockSpec((1, 1, block_q, LANES),
+                            lambda bb, h, i, s, bm, km: (bb, h, i, 0))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, num_slots=num_slots, **kwargs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hq, nq, num_slots),
+            in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+            out_specs=[q_spec],
+            scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((b, hq, lq_pad, d), q.dtype)],
+        interpret=interpret, name="swat_attention_dq",
+    )(kv_map, kinds, q, k, v, do, lse_t, delta_t)[0]
+
+    # ---- dK/dV (inverse pattern; per q-head, group-summed after) ----
+    inv = pattern.inverse()
+    ninv = inv.num_slots
+    q_map = jnp.asarray(inv.q_block_map)
+    ikinds = jnp.asarray(inv.slot_kinds)
+    iq_spec = pl.BlockSpec((1, 1, block_q, d),
+                           lambda bb, h, j, s, qm, km: (bb, h, qm[j, s], 0))
+    ikv_spec = pl.BlockSpec((1, 1, block_kv, d),
+                            lambda bb, h, j, s, qm, km: (bb, h // group, j, 0))
+    okv_spec = pl.BlockSpec((1, 1, block_kv, d),
+                            lambda bb, h, j, s, qm, km: (bb, h, j, 0))
+    irow_spec = pl.BlockSpec((1, 1, block_q, LANES),
+                             lambda bb, h, j, s, qm, km: (bb, h, qm[j, s], 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, num_slots=ninv, **kwargs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hq, nkv, ninv),
+            in_specs=[iq_spec, ikv_spec, ikv_spec, iq_spec, irow_spec,
+                      irow_spec],
+            out_specs=[okv_spec, okv_spec],
+            scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
+                            pltpu.VMEM((block_kv, d), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((b, hq, lkv_pad, d), k.dtype),
+                   jax.ShapeDtypeStruct((b, hq, lkv_pad, d), v.dtype)],
+        interpret=interpret, name="swat_attention_dkv",
+    )(q_map, ikinds, q, k, v, do, lse_t, delta_t)
+
+    dq = dq[:, :, :lq]
+    dk, dv = dk[:, :, :lkv], dv[:, :, :lkv]
+    if group > 1:  # GQA: sum q-head contributions within each kv group
+        dk = dk.reshape(b, hkv, group, lkv, d).sum(axis=2)
+        dv = dv.reshape(b, hkv, group, lkv, d).sum(axis=2)
+    return dq, dk, dv

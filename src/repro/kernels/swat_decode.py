@@ -1,0 +1,107 @@
+"""SWAT decode kernel: one new token vs a ring-buffer KV cache.
+
+The paper's FIFO K/V buffer with a moving replacement pointer (Fig. 4b) *is*
+a ring KV cache: decode with window attention keeps exactly W = 2w (or w for
+causal lookback) K/V rows per layer and evicts slot (step mod W). Because
+softmax is permutation-invariant, attention never needs to un-rotate the
+ring — the kernel just masks cold (not-yet-filled) slots.
+
+Grid: (B, Hq, W/BK). One query row per (batch, head); flash accumulation
+across cache blocks in VMEM scratch. cache lengths are scalar-prefetched so
+the index maps and masks stay static.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.swat_attention import LANES, NEG_INF
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref,
+                   *, block_kv: int, num_blocks: int, scale: float,
+                   softcap: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    st = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, BK)
+    if softcap:
+        st = softcap * jnp.tanh(st / softcap)
+    k_idx = s * block_kv + jax.lax.broadcasted_iota(jnp.int32, (1, block_kv),
+                                                    1)
+    st = jnp.where(k_idx < len_ref[b], st, NEG_INF)
+
+    m_prev = m_ref[:1, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(st, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(st - m_new)
+    p = jnp.where(k_idx < len_ref[b], p, 0.0)
+    l_ref[...] = jnp.broadcast_to(l_ref[:1, :1] * alpha
+                                  + jnp.sum(p, -1, keepdims=True), l_ref.shape)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (1, D)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(s == num_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def swat_decode(q, k_cache, v_cache, cache_len, *,
+                block_kv: int = 128, scale: Optional[float] = None,
+                softcap: float = 0.0, interpret: bool = False):
+    """q: (B, Hq, 1, D); caches: (B, Hkv, W, D); cache_len: int32 (B,) valid
+    entries (ring: min(step, W)). Returns (B, Hq, 1, D)."""
+    b, hq, one, d = q.shape
+    assert one == 1
+    _, hkv, w, _ = k_cache.shape
+    group = hq // hkv
+    scale = float(d ** -0.5 if scale is None else scale)
+    w_pad = -(-w // block_kv) * block_kv
+    if w_pad != w:
+        pad = ((0, 0), (0, 0), (0, w_pad - w), (0, 0))
+        k_cache, v_cache = jnp.pad(k_cache, pad), jnp.pad(v_cache, pad)
+    nb = w_pad // block_kv
+    cache_len = jnp.minimum(jnp.asarray(cache_len, jnp.int32).reshape(b), w)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_kv=block_kv, num_blocks=nb,
+                          scale=scale, softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hq, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, d), lambda bb, h, s, ln: (bb, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_kv, d),
+                             lambda bb, h, s, ln: (bb, h // group, s, 0)),
+                pl.BlockSpec((1, 1, block_kv, d),
+                             lambda bb, h, s, ln: (bb, h // group, s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, d),
+                                   lambda bb, h, s, ln: (bb, h, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32),
+                            pltpu.VMEM((1, LANES), jnp.float32),
+                            pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=interpret, name="swat_decode",
+    )(cache_len, q, k_cache, v_cache)
+    return out

@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+Weak-type-correct, shardable, zero allocation. Covers the four assigned
+shape cells (train_4k / prefill_32k / decode_32k / long_500k) for every
+architecture family (LM, VLM-stub, audio-stub enc-dec, SSM, hybrid, MoE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import model as Mod
+from repro.core.types import ModelConfig, ShapeConfig
+
+ENCODER_FRAMES = 1500    # whisper 30 s after the conv frontend (stubbed)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch specs for the step function this cell lowers
+    (train/prefill: full sequence; decode: one token)."""
+    b, l = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    if shape.mode == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        # stub: pre-fused patch+text embeddings
+        batch["embeddings"] = SDS((b, l, cfg.d_model), dt)
+    else:
+        batch["tokens"] = SDS((b, l), jnp.int32)
+    if cfg.encoder_decoder:
+        batch["enc_embeddings"] = SDS((b, ENCODER_FRAMES, cfg.d_model), dt)
+    if shape.mode == "train":
+        batch["labels"] = SDS((b, l), jnp.int32)
+    return batch
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: Mod.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    assert shape.mode == "decode"
+    enc_len = ENCODER_FRAMES if cfg.encoder_decoder else 0
+    return jax.eval_shape(
+        lambda: Mod.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                enc_len=enc_len))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(param_specs(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: experts beyond top_k are inactive per token."""
+    shapes = param_specs(cfg)
+    total = 0
+    def visit(path, x):
+        nonlocal total
+        n = 1
+        for s in x.shape:
+            n *= s
+        p = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                     for k in path)
+        if "moe/" in p and any(p.endswith(s) for s in ("w1", "w2", "w3")):
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return total

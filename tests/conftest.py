@@ -1,0 +1,18 @@
+"""Tests run on the default single CPU device — the 512-device dry-run sets
+its own XLA flags in a separate process (tests/test_dryrun.py uses
+subprocesses for the same reason)."""
+import os
+
+# keep any inherited forced-device-count out of the test process
+flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" in flags:
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in flags.split() if "device_count" not in f)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,130 @@
+"""Sharding-rule unit tests: profiles produce the intended PartitionSpecs.
+
+These are the §Perf levers — wrong specs silently degrade to replication,
+so pin them. Subprocess for a real 4-device mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_sub(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = f"{ROOT}/src"
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+COMMON = """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.core import model as Mod
+    from repro.distributed import sharding as Sh
+    from repro.launch import mesh as mesh_lib
+
+    cfg = get_smoke_config("llama3p2_1b")
+    mesh = mesh_lib.make_debug_mesh(2, 2)
+    specs = jax.eval_shape(lambda: Mod.init_model(jax.random.PRNGKey(0), cfg))
+
+    def spec_of(tree, *path):
+        node = tree
+        for p in path:
+            node = node[p]
+        return tuple(node.spec)
+"""
+
+
+@pytest.mark.slow
+def test_tp_profile_megatron_pairs():
+    """Column-parallel in-proj over 'model', row-parallel out-proj, FSDP on
+    the complementary dim."""
+    run_sub(COMMON + """
+    sh = Sh.param_sharding(specs, mesh, profile="tp")
+    # blocks leaves have the stacked super-block dim 0 -> rules shift by 1
+    wq = spec_of(sh, "blocks", "l0", "mixer", "wq")
+    wo = spec_of(sh, "blocks", "l0", "mixer", "wo")
+    assert wq[2] == "model" and wq[1] == "data", wq   # col-parallel + FSDP
+    assert wo[1] == "model" and wo[2] == "data", wo   # row-parallel + FSDP
+    print("ok", wq, wo)
+    """)
+
+
+@pytest.mark.slow
+def test_cp_profile_no_tensor_parallel_dims():
+    """cp/fsdp profiles: 2D-FSDP only — no matmul-partitioned dims."""
+    run_sub(COMMON + """
+    sh = Sh.param_sharding(specs, mesh, profile="cp")
+    wq = spec_of(sh, "blocks", "l0", "mixer", "wq")
+    # dim 1 (d_model=64, divisible by 4) takes the combined FSDP axes
+    assert wq[1] == ("data", "model"), wq
+    assert wq[2] is None, wq
+    print("ok", wq)
+    """)
+
+
+@pytest.mark.slow
+def test_fsdp_profile_batch_over_all_axes():
+    run_sub(COMMON + """
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    b_tp = Sh.batch_sharding(batch, mesh, profile="tp")["tokens"].spec
+    b_fs = Sh.batch_sharding(batch, mesh, profile="fsdp")["tokens"].spec
+    def axes(entry):   # PartitionSpec normalizes 1-tuples to bare strings
+        if entry is None:
+            return ()
+        return (entry,) if isinstance(entry, str) else tuple(entry)
+
+    assert axes(tuple(b_tp)[0]) == ("data",), b_tp
+    assert axes(tuple(b_fs)[0]) == ("data", "model"), b_fs
+    a_tp = Sh.activation_spec(mesh, True, "tp")
+    a_fs = Sh.activation_spec(mesh, True, "fsdp")
+    assert axes(tuple(a_tp)[0]) == ("data",) and tuple(a_tp)[1] == "model"
+    assert axes(tuple(a_fs)[0]) == ("data", "model")
+    assert tuple(a_fs)[1] is None
+    print("ok")
+    """)
+
+
+@pytest.mark.slow
+def test_pipe_mesh_shards_superblock_dim():
+    run_sub(COMMON + """
+    import dataclasses
+    pmesh = mesh_lib.make_debug_pp_mesh(2, 2)
+    cfg4 = dataclasses.replace(cfg, num_layers=4)   # 4 super-blocks
+    sp4 = jax.eval_shape(lambda: Mod.init_model(jax.random.PRNGKey(0), cfg4))
+    sh = Sh.param_sharding(sp4, pmesh, profile="tp")
+    wq = spec_of(sh, "blocks", "l0", "mixer", "wq")
+    assert wq[0] == "pipe", wq
+    emb = spec_of(sh, "embed")
+    assert "pipe" not in emb, emb      # non-block leaves stay unstaged
+    print("ok", wq)
+    """)
+
+
+@pytest.mark.slow
+def test_divisibility_fallback_replicates():
+    """Indivisible dims must fall through to the next preference, never
+    produce an invalid spec."""
+    run_sub(COMMON + """
+    import dataclasses, jax.numpy as jnp
+    # vocab 50280 % 2 == 0 but % 4 != 0: embed dim0 tries (model,data)
+    cfg2 = dataclasses.replace(cfg, vocab_size=50281)   # prime-ish: no axis
+    sp = jax.eval_shape(lambda: Mod.init_model(jax.random.PRNGKey(0), cfg2))
+    sh = Sh.param_sharding(sp, mesh, profile="tp")
+    emb = tuple(sh["embed"].spec)
+    assert emb[0] is None, emb         # indivisible -> replicated dim
+    assert emb[1] == "data", emb       # second rule still lands
+    print("ok", emb)
+    """)
