@@ -38,7 +38,7 @@ def main():
     k = jnp.asarray(rng.randn(B, H, L, D), jnp.float32) * 0.3
     v = jnp.asarray(rng.randn(B, H, L, D), jnp.float32) * 0.3
 
-    with jax.set_mesh(mesh):
+    with mesh:  # legacy ambient-mesh context (jax.set_mesh needs newer jax)
         out = CP.swat_attention_context_parallel(
             q, k, v, spec, mesh=mesh, axis="seq")
     ref = R.attention_ref(q, k, v, spec)

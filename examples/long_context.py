@@ -36,7 +36,7 @@ def main():
         logits, caches = decode(params, caches, {"tokens": tok})
         tok = jnp.argmax(logits[:, 0], -1)[:, None]
     dt = time.time() - t0
-    step = int(caches["l0"]["step"][0])
+    step = int(caches["l0"]["step"][0, 0])   # per-slot steps: (blocks, batch)
     cache_mb = ring_cache_bytes(cfg, 1, 131072) / 1e6
     print(f"[long-ctx] decoded {n} tokens at context depth {step} "
           f"({n/dt:.1f} tok/s CPU)")

@@ -1,0 +1,36 @@
+"""jax version-compatibility shims.
+
+The code targets the modern `jax.shard_map` API (axis_names / check_vma);
+the pinned container ships jax 0.4.x where shard_map lives in
+jax.experimental with the (auto / check_rep) spelling. One wrapper keeps
+every call site on the modern vocabulary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """Modern-signature shard_map that lowers to whichever API exists.
+
+    axis_names: the MANUAL axes (partial-manual mode); None = all mesh axes.
+    check_vma maps to legacy check_rep."""
+    names = set(mesh.axis_names if axis_names is None else axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(a for a in mesh.axis_names if a not in names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def axis_size(name) -> int:
+    """Static size of a (manual) mesh axis from inside shard_map —
+    `jax.lax.axis_size` on modern jax, the axis env on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    import jax.core as jcore
+    return jcore.axis_frame(name)

@@ -141,43 +141,48 @@ def cache_capacity(cfg: AttentionLayerCfg, max_len: int) -> int:
 
 def init_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
                   dtype=jnp.bfloat16):
+    """Ring KV cache with a PER-SLOT write pointer: `step` is (batch,) so a
+    continuously-batched decode can serve slots at different depths from one
+    kernel call (each row inserts at its own ring position)."""
     cap = cache_capacity(cfg, max_len)
     shape = (batch, cfg.num_kv_heads, cap, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "step": jnp.zeros((), jnp.int32)}
+            "step": jnp.zeros((batch,), jnp.int32)}
 
 
 def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
-                     impl: str = "xla"):
+                     impl: str = "ref"):
     """One-token decode. x: (B, 1, Dm). Ring insertion at (step mod cap) for
     sparse specs — the paper's FIFO replacement policy (row index mod window).
     Global tokens occupy pinned slots [0, g) (paper §4.1's fixed K/V buffers);
-    the ring occupies [g, cap)."""
+    the ring occupies [g, cap). `step` is per-slot (B,): every row rotates,
+    ropes, and masks at its own depth, which is what lets one batched call
+    serve slots mid-flight at different positions."""
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(params, cfg, x, x)
-    step = cache["step"]
+    step = jnp.broadcast_to(jnp.asarray(cache["step"], jnp.int32), (b,))
     if cfg.use_rope and not cfg.cross:
-        pos = jnp.full((1,), step, jnp.int32)
+        pos = step[:, None, None]                      # (B, 1, 1) per-slot
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
     cap = cache["k"].shape[2]
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     ring = cap - g
-    slot = jnp.where(step < g, step, g + (step - g) % ring)
+    slot = jnp.where(step < g, step, g + (step - g) % ring)    # (B,)
     k_cache = _dyn_update(cache["k"], k_new, slot)
     v_cache = _dyn_update(cache["v"], v_new, slot)
-    cache_len = jnp.minimum(step + 1, cap)
+    cache_len = jnp.minimum(step + 1, cap)                     # (B,)
     out = kops.decode_attention(q, k_cache, v_cache,
-                                cache_len[None, None, None, None]
-                                * jnp.ones((b, 1, 1, 1), jnp.int32),
-                                cfg.spec)
+                                cache_len.reshape(b, 1, 1, 1),
+                                cfg.spec, impl=impl)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     new_cache = {"k": k_cache, "v": v_cache, "step": step + 1}
     return out @ params["wo"], new_cache
 
 
 def _dyn_update(cache, new, slot):
-    """Insert one row at dynamic `slot` along the cap axis.
+    """Insert one row per batch element at its own dynamic `slot` along the
+    cap axis.
 
     Implemented as iota==slot select, NOT dynamic_update_slice: a scatter at
     a dynamic index across a sequence-sharded cache forces XLA SPMD into
@@ -186,17 +191,44 @@ def _dyn_update(cache, new, slot):
     the cost of a full-cache write — decode already reads the full cache for
     attention, so the added traffic is bounded at ~1.5x and the collective
     catastrophe is gone (see EXPERIMENTS.md §Perf).
-    cache: (B, H, cap, D); new: (B, H, 1, D); slot: scalar int32."""
-    cap = cache.shape[2]
-    hit = (jnp.arange(cap, dtype=jnp.int32)
-           == slot.astype(jnp.int32))[None, None, :, None]
+    cache: (B, H, cap, D); new: (B, H, 1, D); slot: (B,) or scalar int32."""
+    b, _, cap, _ = cache.shape
+    slot = jnp.broadcast_to(jnp.asarray(slot, jnp.int32), (b,))
+    hit = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+           == slot[:, None])[:, None, :, None]
     return jnp.where(hit, new.astype(cache.dtype), cache)
 
 
+def ring_scatter(cache_kv, new, positions, write, g: int, ring):
+    """Write `new` (B, H, T, D) rows into their ring slots of a cache
+    (B, H, cap, D). positions: (T,) absolute token indices (traced ok, shared
+    across rows); write: (B, T) bool — which tokens are real for each row
+    (right-padded rows just stop writing). Per (row, slot) the highest-index
+    writer wins, so a span longer than the ring and per-row ragged lengths
+    both resolve exactly as sequential FIFO insertion would."""
+    b, _, cap, _ = cache_kv.shape
+    t = new.shape[2]
+    positions = jnp.asarray(positions, jnp.int32)
+    slot = jnp.where(positions < g, positions, g + (positions - g) % ring)
+    jidx = jnp.arange(t, dtype=jnp.int32)
+    hit = slot[:, None] == jnp.arange(cap, dtype=jnp.int32)[None, :]  # (T,cap)
+    cand = jnp.where(write[:, :, None] & hit[None], jidx[None, :, None], -1)
+    winner = jnp.max(cand, axis=1)                                    # (B,cap)
+    sel = jidx[None, :, None] == winner[:, None, :]                   # (B,T,cap)
+    upd = jnp.einsum("bjs,bhjd->bhsd", sel.astype(cache_kv.dtype),
+                     new.astype(cache_kv.dtype))
+    return jnp.where((winner >= 0)[:, None, :, None], upd, cache_kv)
+
+
 def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
-                     positions=None):
+                     positions=None, lengths=None):
     """Fill a cache from a prompt (B, L, Dm). For ring caches only the last
-    `cap` tokens are retained (earlier ones are outside every future window)."""
+    `cap` tokens are retained (earlier ones are outside every future window).
+
+    lengths: optional (B,) int32 — per-row real prompt length for a padded
+    batched prefill. Rows write only their first `lengths[i]` tokens and the
+    cache step is set per row, so decode continues each row at its own
+    position. Without it every row is taken at full length L."""
     b, l, _ = x.shape
     _, k, v = _project_qkv(params, cfg, x, x)
     if cfg.use_rope and not cfg.cross:
@@ -206,27 +238,111 @@ def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
     cache = init_kv_cache(cfg, b, max_len, dtype=k.dtype)
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     if l <= cap:
+        # no wrap possible: natural slots. Rows shorter than L carry pad K/V
+        # above their step, permanently masked (valid = [0, min(step, cap)))
+        # and overwritten one-for-one as decode advances.
         cache["k"] = jax.lax.dynamic_update_slice(
             cache["k"], k, (0, 0, 0, 0))
         cache["v"] = jax.lax.dynamic_update_slice(
             cache["v"], v, (0, 0, 0, 0))
     else:
-        # pinned globals + ring tail, laid out to match attention_decode
-        ring = cap - g
-        start = l - ring
-        ks = jnp.concatenate([k[:, :, :g], _ring_tail(k, start, ring, g)], 2)
-        vs = jnp.concatenate([v[:, :, :g], _ring_tail(v, start, ring, g)], 2)
-        cache["k"], cache["v"] = ks, vs
-    cache["step"] = jnp.asarray(l, jnp.int32)
+        # pinned globals + ring tail, laid out to match attention_decode;
+        # last-writer-wins scatter reproduces sequential FIFO insertion
+        # per row even when rows wrap at different lengths.
+        lens = (jnp.full((b,), l, jnp.int32) if lengths is None
+                else jnp.asarray(lengths, jnp.int32))
+        write = jnp.arange(l, dtype=jnp.int32)[None, :] < lens[:, None]
+        cache["k"] = ring_scatter(cache["k"], k, jnp.arange(l), write,
+                                  g, cap - g)
+        cache["v"] = ring_scatter(cache["v"], v, jnp.arange(l), write,
+                                  g, cap - g)
+    cache["step"] = (jnp.full((b,), l, jnp.int32) if lengths is None
+                     else jnp.asarray(lengths, jnp.int32))
     return cache
 
 
-def _ring_tail(k, start, ring, g):
-    """Last `ring` rows placed at their ring slots (slot = g+(i-g) % ring)."""
-    tail = jax.lax.dynamic_slice_in_dim(k, start, ring, axis=2)
-    # token index of tail[j] is start+j; its slot is (start+j-g) % ring
-    idx = (start + jnp.arange(ring) - g) % ring
-    return jnp.zeros_like(tail).at[:, :, idx].set(tail)
+def attention_prefill_chunk(params: Params, cfg: AttentionLayerCfg, x, cache,
+                            pos0, lengths):
+    """One chunk of a batched chunked prefill: attend tokens [pos0, pos0+T)
+    against the ring cache (all earlier chunks) plus the chunk itself, then
+    append the chunk's K/V to the ring.
+
+    This is exact — the ring holds every token a band query can still see
+    (window + pinned globals), so chunked prefill computes the same function
+    as full-sequence prefill while the score matrix stays (T, cap+T): VMEM
+    is bounded by the chunk size, not the prompt length. Causal specs only.
+
+    pos0 may be a traced scalar (shared by all rows — the scheduler chunks
+    the padded batch in lockstep); per-row raggedness comes from `lengths`:
+    rows stop writing past their own length and their surplus outputs are
+    garbage the caller discards. Returns (output (B, T, Dm), new cache)."""
+    assert cfg.spec.causal and not cfg.cross
+    b, t, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    pos = pos0 + jnp.arange(t, dtype=jnp.int32)            # (T,) absolute
+    if cfg.use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    cap = cache["k"].shape[2]
+    g = cfg.spec.num_global if cfg.spec.is_sparse else 0
+    ring = cap - g
+    w = cfg.spec.window if cfg.spec.is_sparse else cap + t  # dense: no band
+    lens = jnp.asarray(lengths, jnp.int32)
+
+    # which token each cache slot holds just before this chunk: pinned slot
+    # s holds token s; ring slot r holds the latest token < pos0 congruent
+    # to r (all traced arithmetic so pos0 never forces a retrace)
+    s_idx = jnp.arange(cap, dtype=jnp.int32)
+    r = s_idx - g
+    t_ring = (pos0 - 1) - jnp.mod((pos0 - 1 - g) - r, ring)
+    slot_pos = jnp.where(s_idx < g, s_idx, t_ring)
+    occupied = jnp.where(s_idx < g, pos0 > s_idx,
+                         (pos0 > g + r) & (t_ring >= g))
+    live = occupied[None, :] & (slot_pos[None, :] < lens[:, None])  # (B,cap)
+
+    # band/global masks (causality vs cache is automatic: slot_pos < pos0)
+    allow_c = ((s_idx[None, :] < g)
+               | (slot_pos[None, :] >= pos[:, None] - w)
+               | (pos[:, None] < g))                       # (T, cap)
+    mask_c = live[:, None, :] & allow_c[None]              # (B, T, cap)
+    mask_s = ((pos[None, :] <= pos[:, None])
+              & ((pos[None, :] >= pos[:, None] - w)
+                 | (pos[None, :] < g) | (pos[:, None] < g)))  # (T, T)
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    d = cfg.head_dim
+    from repro.kernels import dots
+    qg = (q.reshape(b, cfg.num_kv_heads, group, t, d)
+          * jnp.asarray(d ** -0.5, q.dtype))
+    s_c = dots.einsum_f32("bhgtd,bhcd->bhgtc", qg, cache["k"])
+    s_s = dots.einsum_f32("bhgtd,bhkd->bhgtk", qg, k_new)
+    if cfg.spec.softcap:
+        s_c = cfg.spec.softcap * jnp.tanh(s_c / cfg.spec.softcap)
+        s_s = cfg.spec.softcap * jnp.tanh(s_s / cfg.spec.softcap)
+    s_c = jnp.where(mask_c[:, None, None], s_c, kops.NEG_INF)
+    s_s = jnp.where(mask_s[None, None, None], s_s, kops.NEG_INF)
+    s_all = jnp.concatenate([s_c, s_s], axis=-1)
+    m = jax.lax.stop_gradient(jnp.max(s_all, axis=-1, keepdims=True))
+    p = jnp.exp(s_all - m)
+    p = jnp.where(jnp.concatenate(
+        [jnp.broadcast_to(mask_c[:, None, None], s_c.shape),
+         jnp.broadcast_to(mask_s[None, None, None], s_s.shape)], axis=-1),
+        p, 0.0)
+    den = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    v_all = jnp.concatenate([cache["v"], v_new], axis=2)
+    o = dots.einsum_f32("bhgtk,bhkd->bhgtd", (p / den).astype(v_all.dtype),
+                        v_all)
+    out = (o.reshape(b, cfg.num_heads, t, d).astype(x.dtype)
+           .transpose(0, 2, 1, 3).reshape(b, t, -1))
+
+    write = pos[None, :] < lens[:, None]                   # (B, T)
+    new_cache = {
+        **cache,
+        "k": ring_scatter(cache["k"], k_new, pos, write, g, ring),
+        "v": ring_scatter(cache["v"], v_new, pos, write, g, ring),
+        "step": jnp.minimum(lens, pos0 + t).astype(jnp.int32),
+    }
+    return out @ params["wo"], new_cache
 
 
 # ---------------------------------------------------------------- mlp ------

@@ -286,13 +286,14 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
-def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None):
+def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
+                        impl: str = "ref"):
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind.startswith("mamba"):
         y, new_cache = S.mamba_decode(p["mixer"], h, cache, cfg.ssm)
     else:
         y, new_cache = L.attention_decode(p["mixer"], attn_cfg(cfg, kind), h,
-                                          cache)
+                                          cache, impl=impl)
     x = x + y
     if kind == "xattn":
         h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
@@ -307,7 +308,7 @@ def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None):
         new_cache = {**new_cache, "xk": cache["xk"], "xv": cache["xv"]}
     if "moe" in p:
         h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
-        y, _ = M.moe_ffn(p["moe"], h, cfg.moe)
+        y, _ = M.moe_ffn(p["moe"], h, cfg.moe, dispatch="dense")
         x = x + y
     elif "mlp" in p:
         h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
@@ -318,15 +319,19 @@ def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None):
 def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
                 impl: str = "xla", unroll: bool = False):
     """One token for every sequence. batch: {"tokens": (B, 1)} (or
-    {"embeddings": (B, 1, D)}). Returns (logits (B, 1, V), new caches)."""
+    {"embeddings": (B, 1, D)}). Per-slot cache steps: rows may sit at
+    different positions (continuous batching). impl="pallas" routes the
+    cache attention through the swat_decode kernel; anything else uses the
+    jnp reference. Returns (logits (B, 1, V), new caches)."""
     x = embed_tokens(params, cfg, batch)
+    dec_impl = "pallas" if impl == "pallas" else "ref"
 
     def block_fn(x, inp):
         blk_p, blk_cache = inp
         new_caches = {}
         for i, kind in enumerate(cfg.layer_pattern):
             x, nc = _apply_layer_decode(blk_p[f"l{i}"], cfg, kind, x,
-                                        blk_cache[f"l{i}"])
+                                        blk_cache[f"l{i}"], impl=dec_impl)
             new_caches[f"l{i}"] = nc
         return x, new_caches
 
@@ -337,12 +342,19 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
 
 
 def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
-            impl: str = "xla", unroll: bool = False):
+            impl: str = "xla", unroll: bool = False, lengths=None):
     """Run the prompt, return (last-position logits, primed caches).
 
     Implemented as forward + cache extraction per layer: each attention layer
     re-projects K/V into its (ring) cache; mamba layers replay their final
-    state. Prompt length L <= max_len."""
+    state. Prompt length L <= max_len.
+
+    lengths: optional (B,) int32 real prompt lengths for a right-padded
+    batched prefill — per-row cache steps, SSM states stopped at each row's
+    length, and logits gathered at each row's last real token. Causality
+    makes the pad tail inert for every valid position."""
+    if lengths is not None:
+        assert not cfg.encoder_decoder, "padded prefill: decoder-only"
     enc_out = encode(params, cfg, batch) if cfg.encoder_decoder else None
     x = embed_tokens(params, cfg, batch)
     l = x.shape[1]
@@ -356,11 +368,13 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
             if kind.startswith("mamba"):
                 y = S.mamba_block(p["mixer"], h, cfg.ssm,
                                   chunk=cfg.ssm.chunk_size)
-                cache = _mamba_prefill_cache(p["mixer"], h, cfg)
+                cache = _mamba_prefill_cache(p["mixer"], h, cfg,
+                                             lengths=lengths)
             else:
                 acfg = attn_cfg(cfg, kind)
                 y = L.attention_layer(p["mixer"], acfg, h, impl=impl)
-                cache = L.prefill_kv_cache(p["mixer"], acfg, h, max_len)
+                cache = L.prefill_kv_cache(p["mixer"], acfg, h, max_len,
+                                           lengths=lengths)
             x = x + y
             if kind == "xattn":
                 h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
@@ -371,7 +385,7 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
                 cache = {**cache, "xk": xk, "xv": xv}
             if "moe" in p:
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
-                y, _ = M.moe_ffn(p["moe"], h, cfg.moe)
+                y, _ = M.moe_ffn(p["moe"], h, cfg.moe, dispatch="dense")
                 x = x + y
             elif "mlp" in p:
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
@@ -382,12 +396,71 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
     (x,), caches = jax.lax.scan(
         block_fn, (x,), params["blocks"],
         unroll=cfg.num_super_blocks if unroll else 1)
-    logits = _unembed(params, cfg, x[:, -1:])
+    if lengths is None:
+        last = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, l - 1)
+        last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx[:, None, None],
+                                (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = _unembed(params, cfg, last)
     return logits, caches
 
 
-def _mamba_prefill_cache(p, h, cfg: ModelConfig):
-    """Final SSM + conv state after a full-sequence mamba pass."""
+def prefill_chunkable(cfg: ModelConfig) -> bool:
+    """Whether `prefill_chunk` supports this config: rope attention-only
+    patterns (mamba carries state between chunks we don't thread; xattn /
+    sinusoidal-position configs take the single-shot path). The single
+    source of truth for the engine's chunking decision."""
+    return cfg.use_rope and all(
+        not k.startswith("mamba") and k != "xattn"
+        for k in cfg.layer_pattern)
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
+                  lengths):
+    """One lockstep chunk of a batched chunked prefill: run tokens
+    [pos0, pos0+T) through the stack against the ring caches and append to
+    them. Exact-band equal to single-shot `prefill`, but per-layer score
+    memory is O(T * (cap + T)) — prefill VMEM is bounded by the chunk size,
+    not the prompt length. Attention-only rope patterns (mamba/xattn configs
+    take the single-shot path). pos0 may be traced: one compiled chunk
+    function serves every chunk index. Returns (hidden states (B, T, D),
+    new caches) — unembedding is the caller's job, which gathers the one
+    last-real-token row per sequence first (a full-vocab projection of
+    every prompt token would dwarf the chunking savings)."""
+    assert prefill_chunkable(cfg), cfg.layer_pattern
+    x = embed_tokens(params, cfg, batch)
+
+    def block_fn(x, inp):
+        blk_p, blk_cache = inp
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            p = blk_p[f"l{i}"]
+            h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+            y, nc = L.attention_prefill_chunk(
+                p["mixer"], attn_cfg(cfg, kind), h, blk_cache[f"l{i}"],
+                pos0, lengths)
+            x = x + y
+            if "moe" in p:
+                h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+                y, _ = M.moe_ffn(p["moe"], h, cfg.moe, dispatch="dense")
+                x = x + y
+            elif "mlp" in p:
+                h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+                x = x + L.mlp(p["mlp"], h)
+            new_caches[f"l{i}"] = nc
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(block_fn, x, (params["blocks"], caches))
+    return x, new_caches
+
+
+def _mamba_prefill_cache(p, h, cfg: ModelConfig, lengths=None):
+    """Final SSM + conv state after a full-sequence mamba pass. With
+    `lengths`, each row's state is stopped at its own last real token: a
+    zeroed dt beyond the length makes decay exp(0)=1 and update 0, so the
+    cumulative scan freezes, and the conv window is gathered per row."""
     spec = cfg.ssm
     bsz, l, dm = h.shape
     di = spec.d_inner(dm)
@@ -397,15 +470,31 @@ def _mamba_prefill_cache(p, h, cfg: ModelConfig):
                                -1)
     conv_in = jnp.concatenate([xin, bc], -1)
     kw = spec.conv_width
-    conv_state = conv_in[:, -(kw - 1):, :]
-    if l < kw - 1:
-        conv_state = jnp.pad(conv_in, ((0, 0), (kw - 1 - l, 0), (0, 0)))
+    if lengths is None:
+        conv_state = conv_in[:, -(kw - 1):, :]
+        if l < kw - 1:
+            conv_state = jnp.pad(conv_in, ((0, 0), (kw - 1 - l, 0), (0, 0)))
+    else:
+        # per-row window [len-kw+1, len); zero-fill where it precedes t=0
+        lens = jnp.asarray(lengths, jnp.int32)
+        idx = lens[:, None] - (kw - 1) + jnp.arange(kw - 1)[None, :]
+        gathered = jnp.take_along_axis(
+            conv_in, jnp.broadcast_to(jnp.maximum(idx, 0)[:, :, None],
+                                      (bsz, kw - 1, conv_in.shape[-1])),
+            axis=1)
+        conv_state = jnp.where((idx >= 0)[:, :, None], gathered, 0.0)
     conv_out = jax.nn.silu(S._causal_conv(conv_in, p["conv_w"], p["conv_b"]))
     xin2, b_mat, c_mat = jnp.split(conv_out, [di, di + g * sdim], -1)
     nh = spec.num_heads(dm)
     xh = xin2.reshape(bsz, l, nh, spec.head_dim)
     b_mat = b_mat.reshape(bsz, l, g, sdim)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        # freeze the recurrence past each row's length: dt=0 -> decay 1,
+        # update 0, so state(L) == state(len)
+        tmask = (jnp.arange(l)[None, :]
+                 < jnp.asarray(lengths, jnp.int32)[:, None])
+        dtv = dtv * tmask[..., None]
     a = -jnp.exp(p["a_log"])
     # state = sum_j exp(sum_{k>j} dt_k a) dt_j B_j x_j  — one pass, fp32
     da = dtv * a

@@ -82,12 +82,20 @@ def init_moe(key, d_model: int, d_ff: int, spec: MoESpec,
 
 def moe_ffn(params: Params, x, spec: MoESpec, *,
             capacity_factor: float = 1.25,
-            return_aux: bool = True) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, L, D) -> (B, L, D), aux load-balancing loss (scalar fp32)."""
+            return_aux: bool = True,
+            dispatch: str = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, D) -> (B, L, D), aux load-balancing loss (scalar fp32).
+
+    dispatch overrides spec.dispatch per call site. Serving (prefill /
+    decode) passes "dense": capacity-based dispatch couples tokens through
+    the shared capacity sort, so a row's output would depend on its
+    batch-mates and padding — the tokens-stationary combine is exact and
+    padding-invariant, which continuous batching requires."""
     b, l, d = x.shape
     e, k = spec.num_experts, spec.top_k
     t = b * l
     xf = x.reshape(t, d)
+    dispatch = spec.dispatch if dispatch is None else dispatch
 
     logits = (xf.astype(jnp.float32) @ params["router"])        # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -95,7 +103,7 @@ def moe_ffn(params: Params, x, spec: MoESpec, *,
     gate_vals = gate_vals / jnp.maximum(
         jnp.sum(gate_vals, -1, keepdims=True), 1e-9)            # renormalize
 
-    if spec.dispatch == "dense":
+    if dispatch == "dense":
         out = _dense_combine(params, xf, gate_vals, expert_ids, e)
         out = out.reshape(b, l, d)
         if return_aux:
@@ -105,7 +113,7 @@ def moe_ffn(params: Params, x, spec: MoESpec, *,
             return out, aux
         return out, jnp.zeros((), jnp.float32)
 
-    if spec.dispatch == "ep":
+    if dispatch == "ep":
         mesh = _ambient_mesh_with("model")
         if mesh is not None and e % mesh.shape["model"] == 0:
             from repro.core import moe_ep

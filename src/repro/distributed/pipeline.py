@@ -63,15 +63,21 @@ def _stage_apply(blocks, cfg: ModelConfig, x, *, impl: str, remat: bool,
 
 
 def pipeline_loss_fn(params, cfg: ModelConfig, batch, pcfg: PipelineConfig,
-                     *, impl: str = "xla", remat: bool = True,
-                     aux_weight: float = 0.01, act_sharding=None):
+                     *, stage_idx=None, impl: str = "xla",
+                     remat: bool = True, aux_weight: float = 0.01,
+                     act_sharding=None):
     """GPipe cross-entropy loss. Call inside shard_map (see make_* below).
 
     params['blocks'] leaves carry the LOCAL stage's super-blocks on dim 0;
     everything else (embed, head, norms) is pipe-replicated. batch tensors
-    are pipe-replicated; only stage 0 reads them."""
-    n = jax.lax.axis_size(pcfg.axis)
-    stage = jax.lax.axis_index(pcfg.axis)
+    are pipe-replicated; only stage 0 reads them. stage_idx: (1,) int32 —
+    the stage id travels AS DATA (pipe-sharded iota) because
+    lax.axis_index under partial-manual shard_map lowers to a PartitionId
+    op the SPMD partitioner rejects (same workaround as context_parallel)."""
+    from repro.core.compat import axis_size
+    n = axis_size(pcfg.axis)
+    stage = (jax.lax.axis_index(pcfg.axis) if stage_idx is None
+             else stage_idx[0])
     m = pcfg.num_microbatches
     tokens, labels = batch["tokens"], batch["labels"]
     bsz, seq = tokens.shape
@@ -154,13 +160,23 @@ def make_pipeline_loss(cfg: ModelConfig, pcfg: PipelineConfig, mesh: Mesh,
                  if k == "blocks" else jax.tree.map(lambda _: P(), v))
              for k, v in params.items()},
             jax.tree.map(lambda _: P(), batch),
+            P(pcfg.axis),
         )
-        fn = jax.shard_map(
-            lambda p, b: body(p, batch=b),
+        from repro.core.compat import shard_map
+        # partial-manual (pipe manual, data/model auto) is the intent; the
+        # legacy XLA SPMD partitioner rejects partial-manual programs
+        # (IsManualSubgroup check), so on old jax run fully manual — the
+        # other axes just replicate this loss, which only uses `pipe`.
+        manual = ({pcfg.axis} if hasattr(jax, "shard_map")
+                  else set(mesh.axis_names))
+        fn = shard_map(
+            lambda p, b, s: body(p, batch=b, stage_idx=s),
             mesh=mesh, in_specs=in_specs,
             out_specs=(P(), {"loss": P(), "aux_loss": P(), "tokens": P()}),
-            axis_names={pcfg.axis}, check_vma=False)
-        return fn(params, batch)
+            axis_names=manual, check_vma=False)
+        # stage index as pipe-sharded data (see pipeline_loss_fn docstring)
+        return fn(params, batch,
+                  jnp.arange(pcfg.num_stages, dtype=jnp.int32))
 
     return loss
 

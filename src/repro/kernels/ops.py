@@ -278,8 +278,22 @@ def swat_attention(q, k, v, spec: AttentionSpec, *,
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
-                     scale: Optional[float] = None):
-    """One-token decode vs a (ring) KV cache — XLA path used by serve_step.
-    The Pallas decode kernel (swat_decode.py) is the TPU hot-spot variant."""
+                     scale: Optional[float] = None, impl: str = "ref",
+                     interpret: Optional[bool] = None):
+    """One-token decode vs a (ring) KV cache. cache_len is per-slot
+    ((B,) or (B,1,1,1)): a continuously-batched engine serves slots at
+    different ring depths from this one call.
+
+    impl="ref" is the jnp path (CPU tests, dry-run lowering); "pallas" is
+    the swat_decode flash kernel (the TPU hot path; interpret mode
+    elsewhere). Both mask the same per-slot valid prefix, and ring order is
+    irrelevant either way — softmax is permutation invariant."""
+    if impl == "pallas":
+        from repro.kernels.swat_decode import swat_decode
+        interpret = default_interpret() if interpret is None else interpret
+        return swat_decode(q, k_cache, v_cache,
+                           jnp.reshape(cache_len, (q.shape[0],)),
+                           scale=scale, softcap=spec.softcap,
+                           interpret=interpret)
     return ref_impl.decode_ref(q, k_cache, v_cache, cache_len, spec,
                                scale=scale)

@@ -9,6 +9,12 @@ ring — the kernel just masks cold (not-yet-filled) slots.
 Grid: (B, Hq, W/BK). One query row per (batch, head); flash accumulation
 across cache blocks in VMEM scratch. cache lengths are scalar-prefetched so
 the index maps and masks stay static.
+
+cache_len is PER SLOT: each batch row masks its own valid prefix, so a
+continuous-batching engine feeds slots at arbitrary, different ring write
+positions through one kernel call — the serving-side payoff of the FIFO
+buffer. Ring rotation never needs un-rotating (softmax is permutation
+invariant); only the cold-slot mask depends on per-slot depth.
 """
 from __future__ import annotations
 

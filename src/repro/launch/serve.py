@@ -1,7 +1,11 @@
-"""Serving launcher: batched window-attention serving with ring KV caches.
+"""Serving launcher: continuous-batching window-attention serving with ring
+KV caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --requests 6 --slots 2
+        --requests 6 --slots 2 --scan-steps 8 --batch-prefill
+
+--scan-steps 1 --no-batch-prefill reproduces the seed engine's per-token
+host-sync behavior (the serve_bench.py baseline).
 """
 import argparse
 import time
@@ -22,6 +26,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=2048)
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="decode steps per host sync (1 = per-token sync)")
+    ap.add_argument("--batch-prefill", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="pack pending prompts into one padded prefill "
+                         "(on by default; --no-batch-prefill reverts to "
+                         "one-prompt-at-a-time seed behavior)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="sequence-axis prefill chunk (0 = single-shot)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=8192)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--decode-impl", choices=("ref", "pallas"),
+                    default="ref")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config, with_swat
@@ -32,18 +50,25 @@ def main():
     if args.swat:
         cfg = with_swat(cfg, window=args.window, num_global=4)
     params = Mod.init_model(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params, batch_slots=args.slots,
-                           max_len=args.max_len)
+    engine = ServingEngine(
+        cfg, params, batch_slots=args.slots, max_len=args.max_len,
+        scan_steps=args.scan_steps, batch_prefill=args.batch_prefill,
+        prefill_chunk=args.prefill_chunk,
+        max_prefill_tokens=args.max_prefill_tokens,
+        top_k=args.top_k, decode_impl=args.decode_impl)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(
         0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
-        max_new_tokens=args.new_tokens) for i in range(args.requests)]
+        max_new_tokens=args.new_tokens, temperature=args.temperature)
+        for i in range(args.requests)]
     t0 = time.time()
     results = engine.run(reqs)
     dt = time.time() - t0
     n = sum(len(r.tokens) for r in results)
     print(f"[serve] {len(results)} requests / {n} tokens in {dt:.1f}s "
-          f"({n / dt:.1f} tok/s)")
+          f"({n / dt:.1f} tok/s; scan_steps={args.scan_steps}, "
+          f"batch_prefill={args.batch_prefill}, "
+          f"prefill_chunk={args.prefill_chunk})")
     print(f"[serve] cache bytes @max_len: "
           f"{ring_cache_bytes(cfg, args.slots, args.max_len) / 1e6:.1f}MB")
 

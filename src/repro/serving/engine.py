@@ -1,25 +1,32 @@
-"""Batched serving engine: prefill + decode with ring KV caches.
+"""Device-resident continuous-batching serving engine.
 
 The paper's FIFO K/V buffer is the serving-side win of window attention:
 decode memory is O(window), not O(context) — SWAT's Fig. 3 linear-memory
-claim. The engine demonstrates it end-to-end:
+claim. The engine turns that into throughput:
 
-  * static batch of slots (TPU-friendly: shapes never change),
-  * continuous batching lite — finished sequences release their slot, the
-    next request is prefilled into it,
-  * per-slot cache_len / step tracking (the caches are stacked pytrees;
-    slot i's entries are batch row i),
-  * greedy or temperature sampling.
+  * static batch of slots (TPU-friendly: shapes never change) with PER-SLOT
+    ring write positions — every row of every cache tracks its own step, so
+    slots at different depths share one batched kernel call,
+  * batched, padded prefill: the scheduler packs all pending prompts that
+    fit into one call (per-row `lengths` mask the padding), optionally
+    chunked along the sequence axis so prefill VMEM is bounded by the chunk
+    size rather than the longest prompt,
+  * scan decode: N tokens per dispatch under `jax.lax.scan` with per-slot
+    done/budget flags — the host syncs once per block instead of once per
+    token (the seed engine's per-token round-trip),
+  * per-slot temperature / top-k sampling (jitted; greedy rows take argmax).
 
-For simplicity slots prefill one at a time (row-inserted into the batched
-cache); decode always runs the full batch. That matches the
-single-sequence-prefill / batched-decode split most production TPU servers
-use.
+Determinism: the RNG key splits once per executed decode step and once per
+prefill batch, in the same order whatever `scan_steps` is (blocks stop at
+the earliest slot completion), so scan decode is token-for-token identical
+to stepwise decode — the property test_serving.py pins down.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import functools
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,8 @@ import numpy as np
 
 from repro.core import model as Mod
 from repro.core.types import ModelConfig
+from repro.serving import sampling
+from repro.serving.scheduler import PrefillPlan, Scheduler
 
 
 @dataclasses.dataclass
@@ -43,84 +52,219 @@ class Result:
     tokens: List[int]
 
 
+class _Compiled:
+    """Jitted functions shared by every engine over the same
+    (cfg, max_len, decode_impl, top_k): compiles are per-model, engines are
+    cheap per-session objects (constructing a second engine must not pay
+    XLA again — `_get_compiled` memoizes these)."""
+
+    def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
+                 top_k: int):
+        self.cfg, self.max_len = cfg, max_len
+        self.decode_impl, self.top_k = decode_impl, top_k
+        self.prefill = jax.jit(lambda p, tok, lens: Mod.prefill(
+            p, cfg, {"tokens": tok}, max_len=max_len, lengths=lens))
+        self.chunk = jax.jit(self._chunk_impl)
+        self.insert = jax.jit(lambda full, one, idx: jax.tree.map(
+            lambda f, o: f.at[:, idx].set(o.astype(f.dtype)), full, one))
+        self.sample = jax.jit(functools.partial(sampling.sample, top_k=top_k))
+        self._scan_fns: Dict[int, Any] = {}
+        self._init_fns: Dict[int, Any] = {}
+
+    def _chunk_impl(self, params, caches, tok, pos0, lengths, last_logits):
+        """One prefill chunk + carry of each row's last-real-token logits
+        (pos0 is traced: one compile serves every chunk index). Only the
+        gathered (B, 1, D) row is unembedded — never the whole chunk."""
+        x, caches = Mod.prefill_chunk(
+            params, self.cfg, {"tokens": tok}, caches, pos0, lengths)
+        t = tok.shape[1]
+        tpos = lengths - 1 - pos0
+        hit = (tpos >= 0) & (tpos < t)
+        xsel = jnp.take_along_axis(
+            x, jnp.broadcast_to(
+                jnp.clip(tpos, 0, t - 1)[:, None, None],
+                (x.shape[0], 1, x.shape[2])), axis=1)
+        sel = Mod._unembed(params, self.cfg, xsel)[:, 0]
+        return jnp.where(hit[:, None], sel, last_logits), caches
+
+    def fresh_caches(self, n: int):
+        if n not in self._init_fns:
+            self._init_fns[n] = jax.jit(
+                lambda: Mod.init_caches(self.cfg, n, self.max_len))
+        return self._init_fns[n]()
+
+    def scan(self, n: int):
+        if n not in self._scan_fns:
+            self._scan_fns[n] = self._make_scan(n)
+        return self._scan_fns[n]
+
+    def _make_scan(self, n: int):
+        cfg, impl, top_k = self.cfg, self.decode_impl, self.top_k
+
+        def fn(params, caches, tok, active, budget, temps, key):
+            def body(carry, _):
+                caches, tok, active, budget, key = carry
+                logits, caches = Mod.decode_step(
+                    params, cfg, {"tokens": tok[:, None]}, caches, impl=impl)
+                key, sub = jax.random.split(key)
+                nxt = sampling.sample(sub, logits[:, 0], temps, top_k)
+                nxt = jnp.where(active, nxt, tok)
+                emitted = active
+                budget = budget - active.astype(jnp.int32)
+                active = active & (budget > 0)
+                return (caches, nxt, active, budget, key), (nxt, emitted)
+
+            carry, (toks, emit) = jax.lax.scan(
+                body, (caches, tok, active, budget, key), None, length=n)
+            caches, tok, active, budget, key = carry
+            return caches, tok, active, budget, key, toks, emit
+
+        return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=16)
+def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
+                  top_k: int) -> _Compiled:
+    return _Compiled(cfg, max_len, decode_impl, top_k)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 8,
-                 max_len: int = 4096, seed: int = 0):
+                 max_len: int = 4096, seed: int = 0, scan_steps: int = 8,
+                 batch_prefill: bool = True, prefill_chunk: int = 0,
+                 max_prefill_tokens: int = 8192, pad_to: int = 16,
+                 top_k: int = 0, decode_impl: str = "ref"):
+        """scan_steps=1 degenerates to the seed engine's per-token host
+        sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
+        batched prefill); batch_prefill=False admits one prompt per prefill
+        call (the seed behavior, kept for benchmarking)."""
         self.cfg, self.params = cfg, params
         self.slots = batch_slots
         self.max_len = max_len
+        self.scan_steps = max(1, scan_steps)
+        self.batch_prefill = batch_prefill
+        self.prefill_chunk = (prefill_chunk
+                              if Mod.prefill_chunkable(cfg) else 0)
+        self.top_k = top_k
+        self.decode_impl = decode_impl
         self.key = jax.random.PRNGKey(seed)
+        self.scheduler = Scheduler(max_prefill_tokens=max_prefill_tokens,
+                                   pad_to=pad_to)
+
         self.caches = Mod.init_caches(cfg, batch_slots, max_len)
         self.slot_free = [True] * batch_slots
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
         self.slot_last = np.zeros((batch_slots,), np.int32)
         self.slot_budget = np.zeros((batch_slots,), np.int32)
+        self.slot_temp = np.zeros((batch_slots,), np.float32)
+        self._completed: List[Result] = []
+        self._c = _get_compiled(cfg, max_len, decode_impl, top_k)
 
-        self._prefill = jax.jit(
-            lambda p, b: Mod.prefill(p, cfg, b, max_len=max_len))
-        self._decode = jax.jit(
-            lambda p, c, b: Mod.decode_step(p, cfg, b, c))
-
-    # ------------------------------------------------------------ slots ----
-    def _insert_rows(self, caches_one, slot: int):
-        """Copy batch-row 0 of a 1-sequence cache pytree into `slot`."""
-        def ins(full, one):
-            if full.ndim < 2 or full.shape[1] != self.slots:
-                return one if full.ndim == one.ndim and full.shape == one.shape else full
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1)
-        return jax.tree.map(ins, self.caches, caches_one)
-
-    def add_request(self, req: Request) -> bool:
-        try:
-            slot = self.slot_free.index(True)
-        except ValueError:
-            return False
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-        logits, caches_one = self._prefill(self.params, batch)
-        self.caches = self._insert_rows(caches_one, slot)
-        tok = self._sample(logits[:, 0], req.temperature)[0]
-        self.slot_free[slot] = False
-        self.slot_req[slot] = req
-        self.slot_out[slot] = [int(tok)]
-        self.slot_last[slot] = int(tok)
-        self.slot_budget[slot] = req.max_new_tokens - 1
-        return True
-
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0:
-            return np.asarray(jnp.argmax(logits, -1))
+    # ------------------------------------------------------------ prefill --
+    def _prefill_into(self, plan: PrefillPlan, slots: List[int]):
+        n, l_pad = plan.tokens.shape
+        tokens = jnp.asarray(plan.tokens)
+        lengths = jnp.asarray(plan.lengths)
+        if self.prefill_chunk and l_pad > self.prefill_chunk:
+            caches = self._c.fresh_caches(n)
+            last = jnp.zeros((n, self.cfg.vocab_size), jnp.float32)
+            for p in range(0, l_pad, self.prefill_chunk):
+                chunk = tokens[:, p:p + self.prefill_chunk]
+                last, caches = self._c.chunk(
+                    self.params, caches, chunk, jnp.int32(p), lengths, last)
+            logits = last
+        else:
+            out, caches = self._c.prefill(self.params, tokens, lengths)
+            logits = out[:, 0]
+        temps = np.asarray([r.temperature for r in plan.requests], np.float32)
         self.key, sub = jax.random.split(self.key)
-        return np.asarray(jax.random.categorical(sub, logits / temperature))
+        first = np.asarray(self._c.sample(sub, logits, jnp.asarray(temps)))
+        self.caches = self._c.insert(self.caches, caches,
+                                     jnp.asarray(slots, jnp.int32))
+        for i, (req, s) in enumerate(zip(plan.requests, slots)):
+            self.slot_out[s] = [int(first[i])]
+            self.slot_last[s] = int(first[i])
+            self.slot_temp[s] = req.temperature
+            budget = req.max_new_tokens - 1
+            if budget <= 0:
+                self._completed.append(Result(req.rid, self.slot_out[s]))
+                self.slot_free[s] = True
+                self.slot_req[s] = None
+                self.slot_budget[s] = 0
+            else:
+                self.slot_free[s] = False
+                self.slot_req[s] = req
+                self.slot_budget[s] = budget
 
-    # ----------------------------------------------------------- decode ----
-    def step(self):
-        """One decode step for every live slot."""
-        batch = {"tokens": jnp.asarray(self.slot_last[:, None], jnp.int32)}
-        logits, self.caches = self._decode(self.params, self.caches, batch)
-        toks = self._sample(logits[:, 0], 0.0)
+    def _admit(self, pending: Deque[Request]):
+        while pending:
+            free = [s for s in range(self.slots) if self.slot_free[s]]
+            if not free:
+                break
+            width = len(free) if self.batch_prefill else 1
+            plan = self.scheduler.plan(pending, width)
+            if plan is None:
+                break
+            self._prefill_into(plan, free[:len(plan.requests)])
+
+    # ------------------------------------------------------------- decode --
+    def _decode_block(self, n: int) -> List[Result]:
+        """Run n decode steps on-device (one host sync), then retire
+        finished slots."""
+        live = [s for s in range(self.slots) if not self.slot_free[s]]
+        if not live:
+            return []
+        active = np.asarray([not f for f in self.slot_free], bool)
+        (self.caches, tok, _, budget, self.key, toks, emit) = \
+            self._c.scan(n)(
+                self.params, self.caches, jnp.asarray(self.slot_last),
+                jnp.asarray(active), jnp.asarray(self.slot_budget),
+                jnp.asarray(self.slot_temp), self.key)
+        toks, emit = np.asarray(toks), np.asarray(emit)
+        self.slot_last = np.array(tok, np.int32)      # writable host mirrors
+        self.slot_budget = np.array(budget, np.int32)
         done: List[Result] = []
-        for s in range(self.slots):
-            if self.slot_free[s]:
-                continue
-            self.slot_out[s].append(int(toks[s]))
-            self.slot_last[s] = int(toks[s])
-            self.slot_budget[s] -= 1
+        for s in live:
+            self.slot_out[s].extend(int(t) for t in toks[emit[:, s], s])
             if self.slot_budget[s] <= 0:
                 done.append(Result(self.slot_req[s].rid, self.slot_out[s]))
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         return done
 
+    def step(self) -> List[Result]:
+        """One decode step for every live slot (the per-token-sync path)."""
+        return self._decode_block(1)
+
+    def _block_len(self) -> int:
+        """Largest block that can't overshoot any live slot: stop at the
+        earliest completion so slots free (and refill) at block boundaries
+        and the RNG stream is identical for every scan_steps setting.
+
+        Deliberate tradeoff: a short-budget request drags the whole batch
+        to short blocks until it retires, and each distinct n compiles its
+        own scan (bounded by scan_steps programs per model). Bucketing n
+        would cut compiles but break the scan==stepwise token-for-token
+        guarantee test_serving pins down; revisit if serving mixes budgets
+        at scale."""
+        live_budgets = [int(self.slot_budget[s]) for s in range(self.slots)
+                        if not self.slot_free[s]]
+        if not live_budgets:
+            return 0
+        return max(1, min(self.scan_steps, min(live_budgets)))
+
+    # --------------------------------------------------------------- run ---
     def run(self, requests: List[Request]) -> List[Result]:
-        pending = list(requests)
+        pending: Deque[Request] = collections.deque(requests)
         results: List[Result] = []
         while pending or not all(self.slot_free):
-            while pending and self.add_request(pending[0]):
-                pending.pop(0)
-            if not all(self.slot_free):
-                results.extend(self.step())
+            self._admit(pending)
+            results.extend(self._completed)
+            self._completed = []
+            n = self._block_len()
+            if n:
+                results.extend(self._decode_block(n))
         return sorted(results, key=lambda r: r.rid)
 
 

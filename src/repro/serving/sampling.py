@@ -1,0 +1,32 @@
+"""Per-slot token sampling for the serving engine.
+
+One jitted function covers the whole batch: each slot carries its own
+temperature (a traced (B,) vector, so mixing greedy and sampling requests
+never retraces), greedy rows take argmax, sampling rows draw from the
+temperature-scaled (optionally top-k-truncated) distribution. This is where
+the seed engine's bug lived — `step()` passed a hard-coded 0.0 instead of
+each slot's `Request.temperature`; the engine now threads the per-slot
+vector through every prefill and decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key, logits, temperatures, top_k: int = 0):
+    """Draw one token per row. logits: (B, V); temperatures: (B,) — rows
+    with temperature <= 0 are greedy. top_k: static int, 0 disables.
+
+    The categorical draw consumes the same randomness whatever the active
+    mask or temperatures are, so a scan-decode loop and a stepwise loop that
+    split keys identically produce identical tokens."""
+    logits = logits.astype(jnp.float32)
+    temperatures = jnp.asarray(temperatures, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    scaled = logits / jnp.maximum(temperatures[:, None], 1e-6)
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0, drawn, greedy)

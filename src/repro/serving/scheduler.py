@@ -1,0 +1,66 @@
+"""Admission scheduling for the continuous-batching engine.
+
+The scheduler turns the pending FCFS queue into one padded, batched prefill
+call: take as many waiting prompts as there are free slots, right-pad them
+to a shared bucketed length, and stop early if the padded token count would
+blow the prefill budget (the VMEM bound — prefill score memory scales with
+padded tokens; the engine additionally chunks long batches along the
+sequence axis). Bucketing pad lengths to `pad_to` multiples keeps the jit
+cache small: the prefill function retraces per (rows, padded_len) pair only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefillPlan:
+    """One batched prefill: `tokens` (n, L_pad) right-padded int32 prompts
+    for `requests`, with per-row real `lengths` (n,)."""
+    requests: List
+    tokens: np.ndarray
+    lengths: np.ndarray
+
+
+class Scheduler:
+    def __init__(self, *, max_prefill_tokens: int = 8192, pad_to: int = 16):
+        assert pad_to >= 1 and max_prefill_tokens >= pad_to
+        self.max_prefill_tokens = max_prefill_tokens
+        self.pad_to = pad_to
+
+    def _bucket(self, n: int) -> int:
+        return -(-max(n, 1) // self.pad_to) * self.pad_to
+
+    def plan(self, pending: Deque, num_free: int) -> Optional[PrefillPlan]:
+        """Pop FCFS prompts into one padded batch. Always admits at least
+        one request when a slot is free; beyond that the padded token total
+        stays under max_prefill_tokens."""
+        if not pending or num_free <= 0:
+            return None
+        take: List = []
+        longest = 0
+        while pending and len(take) < num_free:
+            if len(np.asarray(pending[0].prompt).reshape(-1)) == 0:
+                raise ValueError(
+                    f"request {pending[0].rid}: empty prompt — a completion "
+                    "conditioned on nothing would be silently garbage")
+            cand = max(longest, len(pending[0].prompt))
+            if take and self._bucket(cand) * (len(take) + 1) \
+                    > self.max_prefill_tokens:
+                break
+            take.append(pending.popleft())
+            longest = cand
+        # prompts are NEVER truncated: the ring prefill paths handle
+        # l > cache capacity exactly like the full-prompt reference (only
+        # the last window+globals survive in the cache, as they should)
+        l_pad = self._bucket(longest)
+        tokens = np.zeros((len(take), l_pad), np.int32)
+        lengths = np.zeros((len(take),), np.int32)
+        for i, req in enumerate(take):
+            p = np.asarray(req.prompt, np.int32).reshape(-1)
+            tokens[i, :len(p)] = p
+            lengths[i] = len(p)
+        return PrefillPlan(requests=take, tokens=tokens, lengths=lengths)

@@ -1,0 +1,84 @@
+"""Deterministic stand-in for `hypothesis` so tier-1 collects in a bare env.
+
+Provides the tiny subset this suite uses — `given`, `settings`, and the
+strategies `integers / booleans / sampled_from / just / builds` — backed by a
+numpy RandomState seeded from the test's qualified name. Every run draws the
+same examples in the same order: a failure reproduces exactly, which is all
+the property tests here need (they sweep seeds/shapes, not adversarial
+shrinking). When the real hypothesis is installed the test modules import it
+instead and this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: int(r.randint(min_value, max_value + 1)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.randint(0, 2)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda r: opts[r.randint(0, len(opts))])
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda r: value)
+
+    @staticmethod
+    def builds(target, *arg_strats, **kw_strats):
+        return _Strategy(lambda r: target(
+            *(s.example(r) for s in arg_strats),
+            **{k: s.example(r) for k, s in kw_strats.items()}))
+
+
+def given(**strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.RandomState(seed & 0x7FFFFFFF)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest resolves fixtures from the signature: hide the drawn params
+        # (and the __wrapped__ attr functools.wraps added, which pytest
+        # follows back to the original signature).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+st = strategies

@@ -31,7 +31,7 @@ COMMON = """
         q = jnp.asarray(rng.randn(b, hq, l, d), jnp.float32) * 0.5
         k = jnp.asarray(rng.randn(b, hkv, l, d), jnp.float32) * 0.5
         v = jnp.asarray(rng.randn(b, hkv, l, d), jnp.float32) * 0.5
-        with jax.set_mesh(mesh):
+        with mesh:  # legacy ambient-mesh context (jax.set_mesh needs newer jax)
             got = CP.swat_attention_context_parallel(
                 q, k, v, spec, mesh=mesh, axis="seq",
                 block_q=16, block_kv=16)
@@ -118,7 +118,7 @@ def test_cp_gradients():
         t = jnp.asarray(rng.randn(b, hq, l, d), jnp.float32)
 
         def loss_cp(q, k, v):
-            with jax.set_mesh(mesh):
+            with mesh:  # legacy ambient-mesh context (jax.set_mesh needs newer jax)
                 o = CP.swat_attention_context_parallel(
                     q, k, v, spec, mesh=mesh, axis="seq",
                     block_q=16, block_kv=16)
