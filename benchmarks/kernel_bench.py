@@ -5,9 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.layers import _round_capacity
 from repro.core.types import AttentionSpec
 from repro.kernels.ops import swat_attention
-from repro.kernels.swat_decode import swat_decode
+from repro.kernels.swat_decode import decode_block_kv, swat_decode
 from benchmarks.common import emit, time_fn
 
 
@@ -35,6 +36,34 @@ def main():
                                                     interpret=True))
         t = time_fn(fn, qd, kc, vc, cl, iters=2, warmup=1)
         emit(f"kernel/decode_ring_w{w}", t, "interpret")
+
+    # decode repad before/after: a window+1+globals capacity that is not a
+    # block multiple used to jnp.pad (COPY) both caches on EVERY decode
+    # call; init_kv_cache capacities are now pre-rounded so the hot path
+    # tiles exactly. `before` = the legacy unrounded capacity (falls back
+    # to pad); `after` = the rounded capacity init_kv_cache actually
+    # allocates (must take the no-pad path). 2001 rounds to 2048, so both
+    # sides run the SAME 128-wide grid and the delta isolates the per-call
+    # pad copy (2 * B * Hkv * cap * D bf16 bytes per layer per token).
+    cap_raw = 1996 + 1 + 4                      # window + 1 + num_global
+    cap = _round_capacity(cap_raw)
+    blk, pads = decode_block_kv(cap)
+    # ring (sparse-spec) caches from init_kv_cache never pad; dense caps
+    # follow max_len verbatim and may still hit the fallback for odd values
+    assert not pads, (cap, blk)
+    assert cap % blk == 0 and blk == 128, (cap, blk)
+    assert decode_block_kv(cap_raw)[1], cap_raw  # legacy width DID pad
+    copied = 2 * 8 * hkv * cap_raw * d * 2
+    emit("kernel/decode_repad_bytes_per_call", float(copied), "eliminated")
+    for label, w in (("pad_before", cap_raw), ("nopad_after", cap)):
+        kc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
+        vc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
+        qd = jnp.asarray(rng.randn(8, hq, 1, d), jnp.bfloat16)
+        cl = jnp.full((8,), w, jnp.int32)
+        fn = jax.jit(lambda q, k, v, c: swat_decode(q, k, v, c,
+                                                    interpret=True))
+        t = time_fn(fn, qd, kc, vc, cl, iters=2, warmup=1)
+        emit(f"kernel/decode_repad_{label}_w{w}", t, "interpret")
 
 
 if __name__ == "__main__":

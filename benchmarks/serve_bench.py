@@ -1,34 +1,43 @@
 """Serving engine benchmark: scan-based batched decode vs the seed engine's
-per-token host sync, plus the ring-cache memory claim.
+per-token host sync, the mesh-sharded engine vs single-device, plus the
+ring-cache memory claim.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--arch llama3.2-1b]
         [--requests 8 --slots 4 --new-tokens 64 --scan-steps 8]
+        [--mesh 4x1 --force-devices 4]
 
-Modes compared (same model, same requests, greedy):
+Modes compared (same model, same requests, greedy, fixed seed):
   seed-style : scan_steps=1, one-prompt-at-a-time prefill — one host round
                trip per generated token (the seed ServingEngine behavior)
   batched    : batched padded prefill + lax.scan decode blocks — one host
                sync per scan_steps tokens
+  sharded    : the batched engine under a --mesh device mesh (slot axis
+               over 'data') — decode partitioned by XLA. On the default
+               4x1 slot-parallel mesh every slot's math is device-local,
+               so tokens must be IDENTICAL to the batched mode. Forced
+               host CPU devices share the same silicon, so tok/s here
+               measures partitioning overhead, not speedup — the sharded
+               win is a real-multi-chip property.
 
 Also prints ring-cache bytes (SWAT window spec) vs dense at the serving
 context — the paper's Fig. 3 linear-memory claim applied to decode.
 """
 import argparse
+import os
 import sys
 import time
 
-import jax
 import numpy as np
 
 
 def run_mode(cfg, params, reqs, *, scan_steps, batch_prefill, max_len,
-             label, warm=True):
+             label, mesh=None, warm=True):
     from repro.serving.engine import ServingEngine
 
     def once():
         eng = ServingEngine(cfg, params, batch_slots=ARGS.slots,
                             max_len=max_len, scan_steps=scan_steps,
-                            batch_prefill=batch_prefill)
+                            batch_prefill=batch_prefill, mesh=mesh)
         t0 = time.perf_counter()
         results = eng.run(list(reqs))
         dt = time.perf_counter() - t0
@@ -54,10 +63,28 @@ def main():
     ap.add_argument("--scan-steps", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--mesh", default="4x1",
+                    help="sharded-mode mesh 'DxM' ('' disables the sharded "
+                         "comparison)")
+    ap.add_argument("--force-devices", type=int, default=0,
+                    help="force this many host CPU devices (0 = the mesh "
+                         "size; must be set before jax initializes, which "
+                         "is why this script imports jax late)")
     ARGS = ap.parse_args()
+
+    mesh_dims = (tuple(int(x) for x in ARGS.mesh.split("x"))
+                 if ARGS.mesh else ())
+    need = ARGS.force_devices or (int(np.prod(mesh_dims)) if mesh_dims else 0)
+    if need > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={need} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
 
     from repro.configs import get_smoke_config, with_swat
     from repro.core import model as Mod
+    from repro.launch.mesh import parse_mesh
     from repro.serving.engine import Request, ring_cache_bytes
 
     cfg = with_swat(get_smoke_config(ARGS.arch), window=ARGS.window,
@@ -80,6 +107,35 @@ def main():
           f"speedup {fast_tps / base_tps:.2f}x "
           f"(scan_steps={ARGS.scan_steps} + batched prefill)")
 
+    shard_same = True
+    if mesh_dims and jax.device_count() < int(np.prod(mesh_dims)):
+        # e.g. a non-CPU default backend: the forced-host-device flag only
+        # adds CPU-platform devices. Never skip silently — this bench is
+        # advertised as the sharded-correctness gate.
+        print(f"[serve_bench] WARN: sharded comparison SKIPPED — mesh "
+              f"{ARGS.mesh} needs {int(np.prod(mesh_dims))} devices, "
+              f"have {jax.device_count()} ({jax.default_backend()})",
+              file=sys.stderr)
+    elif mesh_dims:
+        mesh = parse_mesh(ARGS.mesh)
+        shard, shard_tps = run_mode(
+            cfg, params, reqs, scan_steps=ARGS.scan_steps,
+            batch_prefill=True, max_len=ARGS.max_len,
+            label=f"sharded/{ARGS.mesh}", mesh=mesh)
+        identical = all(a.tokens == b.tokens
+                        for a, b in zip(fast, shard))
+        # token-exactness is only guaranteed for slot-parallel meshes
+        # (model dim 1): TP psums a bf16 contraction in a different order,
+        # so near-tied draws may legitimately flip (see serving README)
+        slot_parallel = len(mesh_dims) < 2 or mesh_dims[-1] == 1
+        shard_same = identical or not slot_parallel
+        note = ("" if slot_parallel
+                else " (TP mesh: exactness not required, see README)")
+        print(f"[serve_bench] sharded vs batched: identical {identical}"
+              f"{note}; {shard_tps:.1f} vs {fast_tps:.1f} tok/s "
+              f"({shard_tps / fast_tps:.2f}x on forced-{need}-device CPU — "
+              f"partitioning overhead, not silicon)")
+
     dense = get_smoke_config(ARGS.arch)
     ctx = 65536
     ring = ring_cache_bytes(cfg, ARGS.slots, ctx)
@@ -89,6 +145,9 @@ def main():
           f"({dn / max(ring, 1):.0f}x)")
     if not same:
         print("[serve_bench] FAIL: modes disagree", file=sys.stderr)
+        sys.exit(1)
+    if not shard_same:
+        print("[serve_bench] FAIL: sharded mode disagrees", file=sys.stderr)
         sys.exit(1)
     if fast_tps <= base_tps:
         print("[serve_bench] FAIL: batched mode not faster", file=sys.stderr)

@@ -68,6 +68,18 @@ def sinusoidal_positions(length: int, d: int):
     return pe
 
 
+# ------------------------------------------------------- sharding helper ---
+
+def with_activation_constraint(x, sharding):
+    """Pin activations to a sharding at super-block boundaries (training SP
+    layout, or the serving decode/prefill batch layout). `sharding` is a
+    NamedSharding / PartitionSpec, or None for a no-op — call sites stay
+    unconditional so the model code reads the same sharded and not."""
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
 # ------------------------------------------------------------ attention ----
 
 @dataclasses.dataclass(frozen=True)
@@ -130,21 +142,50 @@ def attention_layer(params: Params, cfg: AttentionLayerCfg, x, *,
 
 # KV cache ------------------------------------------------------------------
 
+def _round_capacity(cap: int) -> int:
+    """Round a ring ALLOCATION up to a TPU-friendly quantum so the
+    swat_decode kernel can tile the cache exactly (block_kv | cap) instead
+    of jnp.pad-ing — and copying — the WHOLE cache on every decode step.
+    Small rings round to the bf16 sublane tile (16); larger ones to 64 so
+    the kernel keeps a wide KV block. A few extra zero rows cost O(window)
+    bytes once; the pad cost a full cache copy per token per layer."""
+    q = 64 if cap > 64 else 16
+    return -(-cap // q) * q
+
+
 def cache_capacity(cfg: AttentionLayerCfg, max_len: int) -> int:
-    """Ring capacity: window+1 for causal sparse attention (the paper's FIFO),
-    full context for dense."""
+    """LOGICAL ring capacity: window+1(+globals) for causal sparse attention
+    (the paper's FIFO — decode attends exactly this many rows, never more),
+    full context for dense. `max_len` may be a physical allocation width
+    (`cache["k"].shape[2]`): the logical capacity is recoverable from it
+    because allocations are only ever >= logical (tile rounding)."""
     if cfg.spec.is_sparse:
         cap = cfg.spec.window + 1 + cfg.spec.num_global
         return min(cap, max_len)
     return max_len
 
 
+def cache_allocation(cfg: AttentionLayerCfg, max_len: int) -> int:
+    """PHYSICAL rows allocated for the ring: the logical capacity rounded up
+    to a tile quantum (clamped to max_len). Rows in [logical, physical) are
+    never written and never attended (`cache_len` <= logical masks them) —
+    they exist purely so the decode kernel's grid tiles the cache exactly
+    and the hot path never re-pads. Window semantics are untouched: the
+    rotation modulus stays the logical capacity."""
+    cap = cache_capacity(cfg, max_len)
+    if cfg.spec.is_sparse:
+        return min(_round_capacity(cap), max_len)
+    return cap
+
+
 def init_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
                   dtype=jnp.bfloat16):
     """Ring KV cache with a PER-SLOT write pointer: `step` is (batch,) so a
     continuously-batched decode can serve slots at different depths from one
-    kernel call (each row inserts at its own ring position)."""
-    cap = cache_capacity(cfg, max_len)
+    kernel call (each row inserts at its own ring position). Allocated at
+    `cache_allocation` width (tile-rounded; the tail rows past the logical
+    capacity stay zero and masked forever)."""
+    cap = cache_allocation(cfg, max_len)
     shape = (batch, cfg.num_kv_heads, cap, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "step": jnp.zeros((batch,), jnp.int32)}
@@ -165,7 +206,10 @@ def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
         pos = step[:, None, None]                      # (B, 1, 1) per-slot
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
-    cap = cache["k"].shape[2]
+    # rotate and mask at the LOGICAL capacity: the allocation may carry a
+    # tile-rounding tail of zero rows that must never be written or attended
+    # (otherwise the rounding would silently widen the attention window)
+    cap = cache_capacity(cfg, cache["k"].shape[2])
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     ring = cap - g
     slot = jnp.where(step < g, step, g + (step - g) % ring)    # (B,)
@@ -283,7 +327,8 @@ def attention_prefill_chunk(params: Params, cfg: AttentionLayerCfg, x, cache,
     if cfg.use_rope:
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
-    cap = cache["k"].shape[2]
+    cap_phys = cache["k"].shape[2]
+    cap = cache_capacity(cfg, cap_phys)    # logical: rotation modulus
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     ring = cap - g
     w = cfg.spec.window if cfg.spec.is_sparse else cap + t  # dense: no band
@@ -291,13 +336,14 @@ def attention_prefill_chunk(params: Params, cfg: AttentionLayerCfg, x, cache,
 
     # which token each cache slot holds just before this chunk: pinned slot
     # s holds token s; ring slot r holds the latest token < pos0 congruent
-    # to r (all traced arithmetic so pos0 never forces a retrace)
-    s_idx = jnp.arange(cap, dtype=jnp.int32)
+    # to r (all traced arithmetic so pos0 never forces a retrace). Slots in
+    # the tile-rounding tail [cap, cap_phys) are never occupied.
+    s_idx = jnp.arange(cap_phys, dtype=jnp.int32)
     r = s_idx - g
     t_ring = (pos0 - 1) - jnp.mod((pos0 - 1 - g) - r, ring)
     slot_pos = jnp.where(s_idx < g, s_idx, t_ring)
     occupied = jnp.where(s_idx < g, pos0 > s_idx,
-                         (pos0 > g + r) & (t_ring >= g))
+                         (pos0 > g + r) & (t_ring >= g)) & (s_idx < cap)
     live = occupied[None, :] & (slot_pos[None, :] < lens[:, None])  # (B,cap)
 
     # band/global masks (causality vs cache is automatic: slot_pos < pos0)

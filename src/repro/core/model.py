@@ -154,9 +154,7 @@ def _stack_forward(blocks: Params, cfg: ModelConfig, x, pattern, *,
                    act_sharding=None, unroll: bool = False,
                    remat_policy: str = "nothing"):
     def constrain(x):
-        if act_sharding is not None:
-            return jax.lax.with_sharding_constraint(x, act_sharding)
-        return x
+        return L.with_activation_constraint(x, act_sharding)
 
     def block_fn(carry, blk_p):
         x, aux = carry
@@ -317,12 +315,16 @@ def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
 
 
 def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
-                impl: str = "xla", unroll: bool = False):
+                impl: str = "xla", unroll: bool = False,
+                act_sharding=None):
     """One token for every sequence. batch: {"tokens": (B, 1)} (or
     {"embeddings": (B, 1, D)}). Per-slot cache steps: rows may sit at
     different positions (continuous batching). impl="pallas" routes the
     cache attention through the swat_decode kernel; anything else uses the
-    jnp reference. Returns (logits (B, 1, V), new caches)."""
+    jnp reference. act_sharding: optional (B, 1, D) sharding pinned at every
+    super-block boundary — under a serving mesh this keeps the decode
+    residual stream slot-sharded instead of letting SPMD replicate it
+    between blocks. Returns (logits (B, 1, V), new caches)."""
     x = embed_tokens(params, cfg, batch)
     dec_impl = "pallas" if impl == "pallas" else "ref"
 
@@ -333,7 +335,7 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
             x, nc = _apply_layer_decode(blk_p[f"l{i}"], cfg, kind, x,
                                         blk_cache[f"l{i}"], impl=dec_impl)
             new_caches[f"l{i}"] = nc
-        return x, new_caches
+        return L.with_activation_constraint(x, act_sharding), new_caches
 
     x, new_caches = jax.lax.scan(
         block_fn, x, (params["blocks"], caches),
@@ -342,7 +344,8 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
 
 
 def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
-            impl: str = "xla", unroll: bool = False, lengths=None):
+            impl: str = "xla", unroll: bool = False, lengths=None,
+            act_sharding=None):
     """Run the prompt, return (last-position logits, primed caches).
 
     Implemented as forward + cache extraction per layer: each attention layer
@@ -352,7 +355,10 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
     lengths: optional (B,) int32 real prompt lengths for a right-padded
     batched prefill — per-row cache steps, SSM states stopped at each row's
     length, and logits gathered at each row's last real token. Causality
-    makes the pad tail inert for every valid position."""
+    makes the pad tail inert for every valid position.
+
+    act_sharding: optional (B, L, D) sharding pinned at super-block
+    boundaries (serving-mesh prefill keeps rows batch-sharded)."""
     if lengths is not None:
         assert not cfg.encoder_decoder, "padded prefill: decoder-only"
     enc_out = encode(params, cfg, batch) if cfg.encoder_decoder else None
@@ -391,7 +397,7 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
                 x = x + L.mlp(p["mlp"], h)
             new_caches[f"l{i}"] = cache
-        return (x,), new_caches
+        return (L.with_activation_constraint(x, act_sharding),), new_caches
 
     (x,), caches = jax.lax.scan(
         block_fn, (x,), params["blocks"],
@@ -418,7 +424,7 @@ def prefill_chunkable(cfg: ModelConfig) -> bool:
 
 
 def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
-                  lengths):
+                  lengths, act_sharding=None):
     """One lockstep chunk of a batched chunked prefill: run tokens
     [pos0, pos0+T) through the stack against the ring caches and append to
     them. Exact-band equal to single-shot `prefill`, but per-layer score
@@ -450,7 +456,7 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
                 x = x + L.mlp(p["mlp"], h)
             new_caches[f"l{i}"] = nc
-        return x, new_caches
+        return L.with_activation_constraint(x, act_sharding), new_caches
 
     x, new_caches = jax.lax.scan(block_fn, x, (params["blocks"], caches))
     return x, new_caches

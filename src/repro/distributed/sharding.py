@@ -55,7 +55,10 @@ _CACHE_RULES: List[Tuple[str, List[Tuple[int, Sequence[Any]]]]] = [
     (r"ssm$",              [(0, (("pod", "data"), "data")),
                             (1, ("model",)),
                             (3, ("model",))]),
-    # "step": replicated
+    # per-slot ring write pointer: MUST ride the same slot axis as the K/V
+    # batch dim — a replicated `step` under a slot-sharded cache makes every
+    # ring insert a cross-shard broadcast and desyncs the per-slot rotation
+    (r"(^|/)step$",        [(0, (("pod", "data"), "data"))]),
 ]
 
 # MoE sharded over 'model': expert dim of the dispatch buffers
@@ -195,6 +198,32 @@ def activation_spec(mesh: Mesh, sequence_parallel: bool = True,
     if profile == "fsdp":
         return P(baxes + ("model",), None, None)
     return P(baxes, "model" if sequence_parallel else None, None)
+
+
+def decode_batch_sharding(shapes, mesh: Mesh, slots: int,
+                          slot_dim: int = 0):
+    """Serving decode-state shardings: any leaf whose `slot_dim` equals the
+    engine's slot count rides the slot axis over ('pod','data') (divisibility
+    permitting); everything else (RNG keys, scalars) replicates. This is the
+    batch analogue of cache_sharding for the per-slot host vectors the
+    engine threads through `_Compiled` — `step`/`slot_last`/`slot_budget`/
+    `slot_temp`/`active` — and for (slots, ...) token/logit blocks.
+
+    slot_dim is EXPLICIT (no shape sniffing): the scan's stacked per-step
+    outputs are (T, slots) and pass slot_dim=1 — when T happens to equal
+    the slot count, guessing the dim would shard the time axis and force a
+    cross-device relayout of every decode block's output."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules = [(0, (baxes, "data"))]
+
+    def leaf(x):
+        shape = tuple(x.shape)
+        if len(shape) > slot_dim and shape[slot_dim] == slots:
+            return NamedSharding(mesh,
+                                 _spec_for(shape, rules, mesh,
+                                           shift=slot_dim))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(leaf, shapes)
 
 
 def replicated(mesh: Mesh):

@@ -288,12 +288,17 @@ def decode_attention(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
     the swat_decode flash kernel (the TPU hot path; interpret mode
     elsewhere). Both mask the same per-slot valid prefix, and ring order is
     irrelevant either way — softmax is permutation invariant."""
+    b = q.shape[0]
+    # accept scalar / (B,) / (B,1,1,1): broadcast, never reshape — a scalar
+    # reshaped to (B,) crashes for B > 1 even though a shared length is the
+    # common cross-attention case (model.py passes a full()'d (B,1,1,1))
+    cl = jnp.asarray(cache_len, jnp.int32)
+    cl = jnp.broadcast_to(cl.reshape(()) if cl.size == 1 else cl.reshape(b),
+                          (b,))
     if impl == "pallas":
         from repro.kernels.swat_decode import swat_decode
         interpret = default_interpret() if interpret is None else interpret
-        return swat_decode(q, k_cache, v_cache,
-                           jnp.reshape(cache_len, (q.shape[0],)),
+        return swat_decode(q, k_cache, v_cache, cl,
                            scale=scale, softcap=spec.softcap,
                            interpret=interpret)
-    return ref_impl.decode_ref(q, k_cache, v_cache, cache_len, spec,
-                               scale=scale)
+    return ref_impl.decode_ref(q, k_cache, v_cache, cl, spec, scale=scale)

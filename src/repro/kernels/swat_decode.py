@@ -19,7 +19,8 @@ invariant); only the cold-slot mask depends on per-slot depth.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,20 +72,49 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
 
 
+_MIN_BLOCK_KV = 16  # bf16 sublane tile: smallest usable (BK, D) block
+
+
+def decode_block_kv(w: int, block_kv: int = 128) -> Tuple[int, bool]:
+    """Resolve the kv block for a cache of W rows: (block, needs_pad).
+
+    Prefer the largest divisor of W that is <= block_kv and sublane-aligned —
+    then the grid tiles the cache EXACTLY and the hot path never copies.
+    `init_kv_cache` ring allocations are pre-rounded (layers.cache_allocation
+    — logical window semantics untouched, only zero tail rows) so engine ring
+    caches always hit the no-pad path; ad-hoc W (odd test shapes, dense caps
+    at unaligned max_len) fall back to the old pad-and-copy."""
+    if w % block_kv == 0:
+        return block_kv, False
+    if w <= block_kv and w % _MIN_BLOCK_KV == 0:
+        return w, False
+    g = math.gcd(w, block_kv)
+    if g >= _MIN_BLOCK_KV:
+        return g, False
+    return block_kv, True
+
+
 def swat_decode(q, k_cache, v_cache, cache_len, *,
                 block_kv: int = 128, scale: Optional[float] = None,
                 softcap: float = 0.0, interpret: bool = False):
     """q: (B, Hq, 1, D); caches: (B, Hkv, W, D); cache_len: int32 (B,) valid
-    entries (ring: min(step, W)). Returns (B, Hq, 1, D)."""
+    entries (ring: min(step, W)). Returns (B, Hq, 1, D).
+
+    The kv block adapts to W (`decode_block_kv`) so ring capacities that
+    aren't a multiple of the default block never jnp.pad — the pad was a
+    full cache COPY per token per layer, dwarfing the attention itself."""
     b, hq, one, d = q.shape
     assert one == 1
     _, hkv, w, _ = k_cache.shape
     group = hq // hkv
     scale = float(d ** -0.5 if scale is None else scale)
-    w_pad = -(-w // block_kv) * block_kv
-    if w_pad != w:
+    block_kv, needs_pad = decode_block_kv(w, block_kv)
+    if needs_pad:
+        w_pad = -(-w // block_kv) * block_kv
         pad = ((0, 0), (0, 0), (0, w_pad - w), (0, 0))
         k_cache, v_cache = jnp.pad(k_cache, pad), jnp.pad(v_cache, pad)
+    else:
+        w_pad = w
     nb = w_pad // block_kv
     cache_len = jnp.minimum(jnp.asarray(cache_len, jnp.int32).reshape(b), w)
 

@@ -30,6 +30,17 @@ def make_pp_mesh(*, num_stages: int = 4, multi_pod: bool = False):
                          ("pipe", "data", "model"))
 
 
+def parse_mesh(spec: str):
+    """Build a mesh from a 'DxM' launcher flag: '4x1' = 4-way data (slot)
+    parallel, '2x2' = data×model, '2x2x2' = pod×data×model. The serving
+    launcher threads this straight into ServingEngine(mesh=)."""
+    dims = tuple(int(x) for x in spec.lower().replace("×", "x").split("x"))
+    assert all(d >= 1 for d in dims), spec
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(dims, axes)
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Tiny mesh for multi-device CPU tests (subprocess sets device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -6,11 +6,19 @@ KV caches.
 
 --scan-steps 1 --no-batch-prefill reproduces the seed engine's per-token
 host-sync behavior (the serve_bench.py baseline).
+
+Mesh-sharded serving: `--mesh 2x2` runs the engine under a data×model
+device mesh (`--mesh 4x1` = pure slot-parallel; 2x2x2 = pod×data×model)
+with `--profile` picking the param sharding rules. On CPU, force a debug
+device count FIRST, e.g.:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --smoke --mesh 2x2
 """
 import argparse
 import time
 
-import jax
 import numpy as np
 
 
@@ -40,22 +48,32 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--decode-impl", choices=("ref", "pallas"),
                     default="ref")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh 'DxM' (e.g. 2x2) — sharded serving; "
+                         "default: single-device")
+    ap.add_argument("--profile", choices=("tp", "cp", "fsdp"), default="tp",
+                    help="param sharding profile for --mesh")
     args = ap.parse_args()
+
+    import jax
 
     from repro.configs import get_config, get_smoke_config, with_swat
     from repro.core import model as Mod
+    from repro.launch.mesh import parse_mesh
     from repro.serving.engine import Request, ServingEngine, ring_cache_bytes
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.swat:
         cfg = with_swat(cfg, window=args.window, num_global=4)
+    mesh = parse_mesh(args.mesh) if args.mesh else None
     params = Mod.init_model(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(
         cfg, params, batch_slots=args.slots, max_len=args.max_len,
         scan_steps=args.scan_steps, batch_prefill=args.batch_prefill,
         prefill_chunk=args.prefill_chunk,
         max_prefill_tokens=args.max_prefill_tokens,
-        top_k=args.top_k, decode_impl=args.decode_impl)
+        top_k=args.top_k, decode_impl=args.decode_impl,
+        mesh=mesh, profile=args.profile)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(
         0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
@@ -65,10 +83,13 @@ def main():
     results = engine.run(reqs)
     dt = time.time() - t0
     n = sum(len(r.tokens) for r in results)
+    mdesc = "single-device" if mesh is None else (
+        "x".join(str(s) for s in mesh.devices.shape)
+        + f" mesh ({args.profile})")
     print(f"[serve] {len(results)} requests / {n} tokens in {dt:.1f}s "
           f"({n / dt:.1f} tok/s; scan_steps={args.scan_steps}, "
           f"batch_prefill={args.batch_prefill}, "
-          f"prefill_chunk={args.prefill_chunk})")
+          f"prefill_chunk={args.prefill_chunk}, {mdesc})")
     print(f"[serve] cache bytes @max_len: "
           f"{ring_cache_bytes(cfg, args.slots, args.max_len) / 1e6:.1f}MB")
 

@@ -16,17 +16,30 @@ claim. The engine turns that into throughput:
     token (the seed engine's per-token round-trip),
   * per-slot temperature / top-k sampling (jitted; greedy rows take argmax).
 
+Mesh-sharded serving (`ServingEngine(mesh=, profile=)`): every jitted entry
+point carries `in_shardings`/`out_shardings` from the distributed/sharding.py
+rule tables — params by `param_sharding` (placed ONCE at engine
+construction), ring caches by `cache_sharding` (slot dim over ('pod','data'),
+kv heads over 'model', per-slot `step` riding the slot axis), and the
+per-slot decode state (`slot_last`/`slot_budget`/`slot_temp`/active flags)
+by `decode_batch_sharding`. XLA then PARTITIONS decode across the mesh
+instead of replicating it — the scan-decode block is the sync quantum. The
+scheduler is told the slot-axis size so admitted prefill batches stay
+divisible (and therefore sharded) whenever enough prompts are pending.
+
 Determinism: the RNG key splits once per executed decode step and once per
 prefill batch, in the same order whatever `scan_steps` is (blocks stop at
 the earliest slot completion), so scan decode is token-for-token identical
-to stepwise decode — the property test_serving.py pins down.
+to stepwise decode — the property test_serving.py pins down. The sharded
+engine runs the same program partitioned, so it is token-for-token identical
+to the single-device engine (tests/test_serving_sharded.py).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,15 +48,20 @@ import numpy as np
 from repro.core import model as Mod
 from repro.core.types import ModelConfig
 from repro.serving import sampling
-from repro.serving.scheduler import PrefillPlan, Scheduler
+from repro.serving.scheduler import PrefillPlan, Scheduler, normalize_prompt
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray           # (L,) int32
+    prompt: np.ndarray           # any int spelling; normalized to (L,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+
+    def __post_init__(self):
+        # normalize ONCE at the boundary: a (1, L) / list-of-lists prompt
+        # used to len()-measure as 1 and crash (or mis-pad) at batch fill
+        self.prompt = normalize_prompt(self.prompt)
 
 
 @dataclasses.dataclass
@@ -54,29 +72,117 @@ class Result:
 
 class _Compiled:
     """Jitted functions shared by every engine over the same
-    (cfg, max_len, decode_impl, top_k): compiles are per-model, engines are
-    cheap per-session objects (constructing a second engine must not pay
-    XLA again — `_get_compiled` memoizes these)."""
+    (cfg, max_len, decode_impl, top_k, mesh, profile): compiles are
+    per-model, engines are cheap per-session objects (constructing a second
+    engine must not pay XLA again — `_get_compiled` memoizes these).
+
+    With a mesh, every function is keyed by its batch-row count so each
+    shape gets exact `in_shardings`/`out_shardings` (the sharding rules are
+    divisibility-aware, so specs depend on the concrete row count)."""
 
     def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
-                 top_k: int):
+                 top_k: int, mesh=None, profile: str = "tp"):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
-        self.prefill = jax.jit(lambda p, tok, lens: Mod.prefill(
-            p, cfg, {"tokens": tok}, max_len=max_len, lengths=lens))
-        self.chunk = jax.jit(self._chunk_impl)
-        self.insert = jax.jit(lambda full, one, idx: jax.tree.map(
-            lambda f, o: f.at[:, idx].set(o.astype(f.dtype)), full, one))
-        self.sample = jax.jit(functools.partial(sampling.sample, top_k=top_k))
-        self._scan_fns: Dict[int, Any] = {}
+        self.mesh, self.profile = mesh, profile
+        if mesh is not None:
+            from repro.distributed import sharding as Sh
+            self._Sh = Sh
+            pshapes = jax.eval_shape(
+                lambda: Mod.init_model(jax.random.PRNGKey(0), cfg))
+            self.param_sharding = Sh.param_sharding(pshapes, mesh, profile)
+            self._rep = Sh.replicated(mesh)
+        else:
+            self._Sh = None
+            self.param_sharding = None
+            self._rep = None
+        self._prefill_fns: Dict[int, Any] = {}
+        self._chunk_fns: Dict[int, Any] = {}
+        self._insert_fns: Dict[Tuple[int, int], Any] = {}
+        self._sample_fns: Dict[int, Any] = {}
+        self._scan_fns: Dict[Tuple[int, int], Any] = {}
         self._init_fns: Dict[int, Any] = {}
 
-    def _chunk_impl(self, params, caches, tok, pos0, lengths, last_logits):
+    # ------------------------------------------------------- sharding maps --
+    def cache_sharding(self, n: int):
+        shapes = jax.eval_shape(
+            lambda: Mod.init_caches(self.cfg, n, self.max_len))
+        return self._Sh.cache_sharding(shapes, self.mesh)
+
+    def batch_sharding(self, shapes, n: int, slot_dim: int = 0):
+        """decode_batch_sharding over a pytree of ShapeDtypeStructs."""
+        return self._Sh.decode_batch_sharding(shapes, self.mesh, n,
+                                              slot_dim=slot_dim)
+
+    def _sds(self, shape, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def slot_quantum(self, slots: int) -> int:
+        """Slot-axis size when the engine's slot count shards over it —
+        the scheduler keeps prefill batches divisible by this."""
+        if self.mesh is None:
+            return 1
+        size = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                size *= self.mesh.shape[a]
+        return size if size > 1 and slots % size == 0 else 1
+
+    def _act_sharding(self, n: int):
+        if self.mesh is None:
+            return None
+        return self.batch_sharding(
+            self._sds((n, 1, self.cfg.d_model), jnp.float32), n)
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, n: int):
+        if n not in self._prefill_fns:
+            act = self._act_sharding(n)
+
+            def fn(p, tok, lens):
+                return Mod.prefill(p, self.cfg, {"tokens": tok},
+                                   max_len=self.max_len, lengths=lens,
+                                   act_sharding=act)
+            if self.mesh is None:
+                self._prefill_fns[n] = jax.jit(fn)
+            else:
+                vec = self.batch_sharding(self._sds((n,)), n)
+                tok_sh = self.batch_sharding(self._sds((n, 1)), n)
+                logit_sh = self.batch_sharding(
+                    self._sds((n, 1, self.cfg.vocab_size), jnp.float32), n)
+                self._prefill_fns[n] = jax.jit(
+                    fn,
+                    in_shardings=(self.param_sharding, tok_sh, vec),
+                    out_shardings=(logit_sh, self.cache_sharding(n)))
+        return self._prefill_fns[n]
+
+    def chunk(self, n: int):
+        if n not in self._chunk_fns:
+            act = self._act_sharding(n)
+            fn = functools.partial(self._chunk_impl, act_sharding=act)
+            if self.mesh is None:
+                self._chunk_fns[n] = jax.jit(fn)
+            else:
+                vec = self.batch_sharding(self._sds((n,)), n)
+                tok_sh = self.batch_sharding(self._sds((n, 1)), n)
+                logit_sh = self.batch_sharding(
+                    self._sds((n, self.cfg.vocab_size), jnp.float32), n)
+                cache_sh = self.cache_sharding(n)
+                self._chunk_fns[n] = jax.jit(
+                    fn,
+                    in_shardings=(self.param_sharding, cache_sh, tok_sh,
+                                  self._rep, vec, logit_sh),
+                    out_shardings=(logit_sh, cache_sh))
+        return self._chunk_fns[n]
+
+    def _chunk_impl(self, params, caches, tok, pos0, lengths, last_logits,
+                    act_sharding=None):
         """One prefill chunk + carry of each row's last-real-token logits
         (pos0 is traced: one compile serves every chunk index). Only the
         gathered (B, 1, D) row is unembedded — never the whole chunk."""
         x, caches = Mod.prefill_chunk(
-            params, self.cfg, {"tokens": tok}, caches, pos0, lengths)
+            params, self.cfg, {"tokens": tok}, caches, pos0, lengths,
+            act_sharding=act_sharding)
         t = tok.shape[1]
         tpos = lengths - 1 - pos0
         hit = (tpos >= 0) & (tpos < t)
@@ -87,25 +193,63 @@ class _Compiled:
         sel = Mod._unembed(params, self.cfg, xsel)[:, 0]
         return jnp.where(hit[:, None], sel, last_logits), caches
 
+    def insert(self, slots: int, n: int):
+        key = (slots, n)
+        if key not in self._insert_fns:
+            def fn(full, one, idx):
+                return jax.tree.map(
+                    lambda f, o: f.at[:, idx].set(o.astype(f.dtype)),
+                    full, one)
+            if self.mesh is None:
+                self._insert_fns[key] = jax.jit(fn)
+            else:
+                self._insert_fns[key] = jax.jit(
+                    fn,
+                    in_shardings=(self.cache_sharding(slots),
+                                  self.cache_sharding(n), self._rep),
+                    out_shardings=self.cache_sharding(slots))
+        return self._insert_fns[key]
+
+    def sample(self, n: int):
+        if n not in self._sample_fns:
+            fn = functools.partial(sampling.sample, top_k=self.top_k)
+            if self.mesh is None:
+                self._sample_fns[n] = jax.jit(fn)
+            else:
+                vecf = self.batch_sharding(self._sds((n,), jnp.float32), n)
+                veci = self.batch_sharding(self._sds((n,)), n)
+                logit_sh = self.batch_sharding(
+                    self._sds((n, self.cfg.vocab_size), jnp.float32), n)
+                self._sample_fns[n] = jax.jit(
+                    fn, in_shardings=(self._rep, logit_sh, vecf),
+                    out_shardings=veci)
+        return self._sample_fns[n]
+
     def fresh_caches(self, n: int):
         if n not in self._init_fns:
+            out_sh = None if self.mesh is None else self.cache_sharding(n)
             self._init_fns[n] = jax.jit(
-                lambda: Mod.init_caches(self.cfg, n, self.max_len))
+                lambda: Mod.init_caches(self.cfg, n, self.max_len),
+                out_shardings=out_sh)
         return self._init_fns[n]()
 
-    def scan(self, n: int):
-        if n not in self._scan_fns:
-            self._scan_fns[n] = self._make_scan(n)
-        return self._scan_fns[n]
+    # ------------------------------------------------------------- decode --
+    def scan(self, n: int, slots: int):
+        key = (n, slots)
+        if key not in self._scan_fns:
+            self._scan_fns[key] = self._make_scan(n, slots)
+        return self._scan_fns[key]
 
-    def _make_scan(self, n: int):
+    def _make_scan(self, n: int, slots: int):
         cfg, impl, top_k = self.cfg, self.decode_impl, self.top_k
+        act = self._act_sharding(slots)
 
         def fn(params, caches, tok, active, budget, temps, key):
             def body(carry, _):
                 caches, tok, active, budget, key = carry
                 logits, caches = Mod.decode_step(
-                    params, cfg, {"tokens": tok[:, None]}, caches, impl=impl)
+                    params, cfg, {"tokens": tok[:, None]}, caches, impl=impl,
+                    act_sharding=act)
                 key, sub = jax.random.split(key)
                 nxt = sampling.sample(sub, logits[:, 0], temps, top_k)
                 nxt = jnp.where(active, nxt, tok)
@@ -119,13 +263,24 @@ class _Compiled:
             caches, tok, active, budget, key = carry
             return caches, tok, active, budget, key, toks, emit
 
-        return jax.jit(fn)
+        if self.mesh is None:
+            return jax.jit(fn)
+        cache_sh = self.cache_sharding(slots)
+        veci = self.batch_sharding(self._sds((slots,)), slots)
+        vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
+        vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
+        blk = self.batch_sharding(self._sds((n, slots)), slots, slot_dim=1)
+        return jax.jit(
+            fn,
+            in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
+                          vecf, self._rep),
+            out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk))
 
 
 @functools.lru_cache(maxsize=16)
 def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
-                  top_k: int) -> _Compiled:
-    return _Compiled(cfg, max_len, decode_impl, top_k)
+                  top_k: int, mesh=None, profile: str = "tp") -> _Compiled:
+    return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile)
 
 
 class ServingEngine:
@@ -133,12 +288,20 @@ class ServingEngine:
                  max_len: int = 4096, seed: int = 0, scan_steps: int = 8,
                  batch_prefill: bool = True, prefill_chunk: int = 0,
                  max_prefill_tokens: int = 8192, pad_to: int = 16,
-                 top_k: int = 0, decode_impl: str = "ref"):
+                 top_k: int = 0, decode_impl: str = "ref",
+                 mesh=None, profile: str = "tp"):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
-        call (the seed behavior, kept for benchmarking)."""
-        self.cfg, self.params = cfg, params
+        call (the seed behavior, kept for benchmarking).
+
+        mesh: optional jax.sharding.Mesh — params are placed once at
+        construction (`param_sharding(profile)`), caches/decode state carry
+        the serving sharding rules, and every jitted call runs partitioned.
+        batch_slots should be a multiple of the slot-axis size
+        (('pod',)'data') for the slot dim to actually shard; indivisible
+        counts degrade gracefully to replication."""
+        self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.scan_steps = max(1, scan_steps)
@@ -147,11 +310,17 @@ class ServingEngine:
                               if Mod.prefill_chunkable(cfg) else 0)
         self.top_k = top_k
         self.decode_impl = decode_impl
+        self.mesh, self.profile = mesh, profile
         self.key = jax.random.PRNGKey(seed)
-        self.scheduler = Scheduler(max_prefill_tokens=max_prefill_tokens,
-                                   pad_to=pad_to)
+        self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
+                                profile)
+        self.params = (params if mesh is None
+                       else jax.device_put(params, self._c.param_sharding))
+        self.scheduler = Scheduler(
+            max_prefill_tokens=max_prefill_tokens, pad_to=pad_to,
+            slot_quantum=self._c.slot_quantum(batch_slots))
 
-        self.caches = Mod.init_caches(cfg, batch_slots, max_len)
+        self.caches = self._c.fresh_caches(batch_slots)
         self.slot_free = [True] * batch_slots
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
@@ -159,7 +328,6 @@ class ServingEngine:
         self.slot_budget = np.zeros((batch_slots,), np.int32)
         self.slot_temp = np.zeros((batch_slots,), np.float32)
         self._completed: List[Result] = []
-        self._c = _get_compiled(cfg, max_len, decode_impl, top_k)
 
     # ------------------------------------------------------------ prefill --
     def _prefill_into(self, plan: PrefillPlan, slots: List[int]):
@@ -171,17 +339,17 @@ class ServingEngine:
             last = jnp.zeros((n, self.cfg.vocab_size), jnp.float32)
             for p in range(0, l_pad, self.prefill_chunk):
                 chunk = tokens[:, p:p + self.prefill_chunk]
-                last, caches = self._c.chunk(
+                last, caches = self._c.chunk(n)(
                     self.params, caches, chunk, jnp.int32(p), lengths, last)
             logits = last
         else:
-            out, caches = self._c.prefill(self.params, tokens, lengths)
+            out, caches = self._c.prefill(n)(self.params, tokens, lengths)
             logits = out[:, 0]
         temps = np.asarray([r.temperature for r in plan.requests], np.float32)
         self.key, sub = jax.random.split(self.key)
-        first = np.asarray(self._c.sample(sub, logits, jnp.asarray(temps)))
-        self.caches = self._c.insert(self.caches, caches,
-                                     jnp.asarray(slots, jnp.int32))
+        first = np.asarray(self._c.sample(n)(sub, logits, jnp.asarray(temps)))
+        self.caches = self._c.insert(self.slots, n)(
+            self.caches, caches, jnp.asarray(slots, jnp.int32))
         for i, (req, s) in enumerate(zip(plan.requests, slots)):
             self.slot_out[s] = [int(first[i])]
             self.slot_last[s] = int(first[i])
@@ -217,7 +385,7 @@ class ServingEngine:
             return []
         active = np.asarray([not f for f in self.slot_free], bool)
         (self.caches, tok, _, budget, self.key, toks, emit) = \
-            self._c.scan(n)(
+            self._c.scan(n, self.slots)(
                 self.params, self.caches, jnp.asarray(self.slot_last),
                 jnp.asarray(active), jnp.asarray(self.slot_budget),
                 jnp.asarray(self.slot_temp), self.key)
@@ -270,8 +438,9 @@ class ServingEngine:
 
 def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:
     """Decode-cache bytes — the paper's Fig. 3 memory comparison. Window
-    attention: O(window); dense: O(context)."""
-    from repro.core.layers import cache_capacity
+    attention: O(window); dense: O(context). Counts PHYSICAL rows
+    (`cache_allocation`: logical capacity + the tile-rounding tail)."""
+    from repro.core.layers import cache_allocation
     from repro.core.model import attn_cfg
     total = 0
     for kind in cfg.layer_pattern:
@@ -284,6 +453,6 @@ def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:
                                  + 2 * spec.num_groups * spec.state_dim) * 2)
             continue
         acfg = attn_cfg(cfg, kind)
-        cap = cache_capacity(acfg, context)
+        cap = cache_allocation(acfg, context)
         total += 2 * batch * acfg.num_kv_heads * cap * acfg.head_dim * 2
     return total * cfg.num_super_blocks

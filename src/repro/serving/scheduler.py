@@ -7,6 +7,14 @@ blow the prefill budget (the VMEM bound — prefill score memory scales with
 padded tokens; the engine additionally chunks long batches along the
 sequence axis). Bucketing pad lengths to `pad_to` multiples keeps the jit
 cache small: the prefill function retraces per (rows, padded_len) pair only.
+
+Under a device mesh the batch ROW count matters too: a prefill of n rows
+only shards over the slot axis when n divides it, otherwise the whole
+prefill silently replicates. `slot_quantum` (the engine passes the mesh's
+slot-axis size) makes admission divisibility-aware: whenever more than one
+quantum of prompts is available, the batch is trimmed to a quantum multiple
+(the remainder stays queued for the next — also sharded — batch). A final
+sub-quantum batch still admits, so nothing ever starves.
 """
 from __future__ import annotations
 
@@ -14,6 +22,13 @@ import dataclasses
 from typing import Deque, List, Optional
 
 import numpy as np
+
+
+def normalize_prompt(prompt) -> np.ndarray:
+    """Flatten any prompt spelling — list, list-of-lists, (L,), (1, L) —
+    to the 1-D int32 the whole serving stack assumes. Measuring a (1, L)
+    prompt with len() used to report 1 and mis-size the padded batch."""
+    return np.asarray(prompt, np.int32).reshape(-1)
 
 
 @dataclasses.dataclass
@@ -26,10 +41,13 @@ class PrefillPlan:
 
 
 class Scheduler:
-    def __init__(self, *, max_prefill_tokens: int = 8192, pad_to: int = 16):
+    def __init__(self, *, max_prefill_tokens: int = 8192, pad_to: int = 16,
+                 slot_quantum: int = 1):
         assert pad_to >= 1 and max_prefill_tokens >= pad_to
+        assert slot_quantum >= 1
         self.max_prefill_tokens = max_prefill_tokens
         self.pad_to = pad_to
+        self.slot_quantum = slot_quantum
 
     def _bucket(self, n: int) -> int:
         return -(-max(n, 1) // self.pad_to) * self.pad_to
@@ -37,30 +55,42 @@ class Scheduler:
     def plan(self, pending: Deque, num_free: int) -> Optional[PrefillPlan]:
         """Pop FCFS prompts into one padded batch. Always admits at least
         one request when a slot is free; beyond that the padded token total
-        stays under max_prefill_tokens."""
+        stays under max_prefill_tokens and (when possible) the row count is
+        a slot_quantum multiple so the prefill shards over the slot axis."""
         if not pending or num_free <= 0:
             return None
         take: List = []
+        flat: List[np.ndarray] = []
         longest = 0
         while pending and len(take) < num_free:
-            if len(np.asarray(pending[0].prompt).reshape(-1)) == 0:
+            head = normalize_prompt(pending[0].prompt)
+            if head.size == 0:
                 raise ValueError(
                     f"request {pending[0].rid}: empty prompt — a completion "
                     "conditioned on nothing would be silently garbage")
-            cand = max(longest, len(pending[0].prompt))
+            cand = max(longest, head.size)
             if take and self._bucket(cand) * (len(take) + 1) \
                     > self.max_prefill_tokens:
                 break
             take.append(pending.popleft())
+            flat.append(head)
             longest = cand
+        q = self.slot_quantum
+        if len(take) > q and len(take) % q:
+            # return the sub-quantum tail to the queue head (FCFS intact):
+            # a quantum-multiple batch shards; the tail rides the next batch
+            keep = (len(take) // q) * q
+            for req in reversed(take[keep:]):
+                pending.appendleft(req)
+            take, flat = take[:keep], flat[:keep]
+            longest = max(p.size for p in flat)
         # prompts are NEVER truncated: the ring prefill paths handle
         # l > cache capacity exactly like the full-prompt reference (only
         # the last window+globals survive in the cache, as they should)
         l_pad = self._bucket(longest)
         tokens = np.zeros((len(take), l_pad), np.int32)
         lengths = np.zeros((len(take),), np.int32)
-        for i, req in enumerate(take):
-            p = np.asarray(req.prompt, np.int32).reshape(-1)
-            tokens[i, :len(p)] = p
-            lengths[i] = len(p)
+        for i, p in enumerate(flat):
+            tokens[i, :p.size] = p
+            lengths[i] = p.size
         return PrefillPlan(requests=take, tokens=tokens, lengths=lengths)

@@ -13,8 +13,8 @@ except ImportError:  # bare env: deterministic seeded fallback (tier-1)
 from repro.core import patterns
 from repro.core.types import AttentionSpec
 from repro.kernels import ref
-from repro.kernels.ops import get_pattern, swat_attention
-from repro.kernels.swat_decode import swat_decode
+from repro.kernels.ops import decode_attention, get_pattern, swat_attention
+from repro.kernels.swat_decode import decode_block_kv, swat_decode
 
 
 def rand_qkv(rng, b, hq, hkv, l, d, dtype=jnp.float32):
@@ -177,6 +177,52 @@ def test_decode_ring_permutation_invariance(seed):
     a = swat_decode(q, kc, vc, full, interpret=True)
     bb = swat_decode(q, kc[:, :, perm], vc[:, :, perm], full, interpret=True)
     np.testing.assert_allclose(a, bb, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("form", ["scalar", "flat", "b111"])
+def test_decode_attention_cache_len_forms(form, rng):
+    """decode_attention accepts every documented cache_len spelling — scalar
+    (shared length), (B,), (B,1,1,1) — on BOTH impls. Regression: the pallas
+    path used to jnp.reshape a scalar to (B,), which crashes for B > 1 (the
+    cross-attention call site passes a full()'d (B,1,1,1))."""
+    b, hq, hkv, w, d = 3, 4, 2, 64, 32
+    q = jnp.asarray(rng.randn(b, hq, 1, d), jnp.float32)
+    kc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    vc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    spec = AttentionSpec(kind="dense")
+    ln = 37
+    cl = {"scalar": jnp.int32(ln),
+          "flat": jnp.full((b,), ln, jnp.int32),
+          "b111": jnp.full((b, 1, 1, 1), ln, jnp.int32)}[form]
+    want = ref.decode_ref(q, kc, vc, jnp.full((b, 1, 1, 1), ln, jnp.int32),
+                          spec)
+    got_ref = decode_attention(q, kc, vc, cl, spec, impl="ref")
+    got_pal = decode_attention(q, kc, vc, cl, spec, impl="pallas",
+                               interpret=True)
+    np.testing.assert_allclose(got_ref, want, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(got_pal, want, atol=2e-5, rtol=1e-4)
+
+
+def test_decode_block_kv_never_pads_rounded_capacities(rng):
+    """Ring allocations from init_kv_cache are pre-rounded
+    (layers.cache_allocation) so the decode hot path must tile them exactly —
+    the old unconditional pad copied the WHOLE cache every token. Odd ad-hoc
+    widths may still pad (the cold fallback), but must stay correct."""
+    from repro.core.layers import _round_capacity
+    for cap in (17, 21, 64, 100, 261, 2049):
+        w = _round_capacity(cap)
+        blk, pads = decode_block_kv(w)
+        assert not pads and w % blk == 0, (cap, w, blk)
+    # unrounded odd width: falls back to pad, output still exact
+    b, hq, hkv, w, d = 2, 4, 2, 300, 32
+    q = jnp.asarray(rng.randn(b, hq, 1, d), jnp.float32)
+    kc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    vc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    cl = jnp.asarray([299, 123], jnp.int32)
+    got = swat_decode(q, kc, vc, cl, interpret=True)
+    want = ref.decode_ref(q, kc, vc, cl[:, None, None, None],
+                          AttentionSpec(kind="dense"))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
 
 
 def test_decode_per_slot_ring_offsets(rng):

@@ -210,11 +210,106 @@ def test_scheduler_packs_and_respects_budget():
     assert plan2.tokens.shape[1] == 64
 
 
+def test_sampling_isolated_across_slots(swat_setup):
+    """sampling.sample consumes IDENTICAL randomness for greedy and sampled
+    rows (one categorical draw over the whole batch, masked afterwards), so
+    flipping one slot's temperature must not perturb any other slot's
+    tokens. The scan==stepwise guarantee silently relies on this: if a
+    greedy row skipped the draw, admission order would shift every later
+    row's RNG stream."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(8)
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (11, 19, 14)]
+
+    def run_with(temps):
+        eng = ServingEngine(cfg, params, batch_slots=3, max_len=128,
+                            scan_steps=4, seed=13)
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=6,
+                        temperature=temps[i]) for i in range(3)]
+        return {r.rid: r.tokens for r in eng.run(reqs)}
+
+    cold = run_with([0.0, 0.0, 0.0])
+    hot = run_with([0.0, 4.0, 0.0])     # swap ONLY slot 1 to sampling
+    assert hot[0] == cold[0], (hot[0], cold[0])
+    assert hot[2] == cold[2], (hot[2], cold[2])
+    assert hot[1] != cold[1], "temperature=4 slot must actually sample"
+
+    # and at the sampling level: the greedy rows' argmax is untouched by
+    # the batch-wide draw whatever the temperature vector is
+    key = jax.random.PRNGKey(5)
+    logits = jnp.asarray(rng.randn(3, cfg.vocab_size), jnp.float32)
+    from repro.serving import sampling
+    a = sampling.sample(key, logits, jnp.asarray([0.0, 0.0, 0.0]))
+    b = sampling.sample(key, logits, jnp.asarray([0.0, 4.0, 0.0]))
+    assert a[0] == b[0] and a[2] == b[2]
+
+
+def test_request_prompt_shape_normalized(setup):
+    """Regression: a (1, L) or list-of-lists prompt used to measure
+    longest=1 in Scheduler.plan and crash (or mis-pad) at batch fill. Any
+    spelling must serve identically to the flat (L,) prompt."""
+    cfg, params = setup
+    rng = np.random.RandomState(7)
+    flat = rng.randint(0, cfg.vocab_size, (13,)).astype(np.int32)
+    want = ServingEngine(cfg, params, batch_slots=1, max_len=128).run(
+        [Request(rid=0, prompt=flat, max_new_tokens=4)])[0].tokens
+    for spelling in (flat[None, :],                 # (1, L)
+                     [list(map(int, flat))],        # list-of-lists
+                     list(map(int, flat))):         # plain list
+        got = ServingEngine(cfg, params, batch_slots=1, max_len=128).run(
+            [Request(rid=0, prompt=spelling, max_new_tokens=4)])[0].tokens
+        assert got == want, (spelling, got, want)
+
+
+def test_scheduler_slot_quantum_trims_to_multiple():
+    """Divisibility-aware admission: with a slot quantum (the mesh slot-axis
+    size) the batch is trimmed to a quantum multiple when MORE than one
+    quantum is available — the remainder stays queued, FCFS order intact —
+    but a final sub-quantum batch still admits."""
+    def mkpending(n):
+        return collections.deque(
+            Request(rid=i, prompt=np.zeros((8,), np.int32)) for i in range(n))
+
+    sched = Scheduler(max_prefill_tokens=8192, pad_to=16, slot_quantum=2)
+    pending = mkpending(3)
+    plan = sched.plan(pending, num_free=4)
+    assert [r.rid for r in plan.requests] == [0, 1]   # trimmed 3 -> 2
+    assert [r.rid for r in pending] == [2]
+    plan2 = sched.plan(pending, num_free=4)
+    assert [r.rid for r in plan2.requests] == [2]     # tail still admits
+
+
 def test_empty_prompt_rejected(setup):
     cfg, params = setup
     eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
     with pytest.raises(ValueError, match="empty prompt"):
         eng.run([Request(rid=0, prompt=np.zeros((0,), np.int32))])
+
+
+def test_allocation_rounding_does_not_widen_window(swat_setup):
+    """The tile-rounded cache ALLOCATION (layers.cache_allocation — lets
+    swat_decode tile the ring with no per-token pad copy) must not change
+    what decode attends to: window=16,g=4 => logical capacity 21. With
+    max_len=21 the allocation is clamped to exactly 21 rows; with
+    max_len=256 it is rounded to 32 — eleven zero tail rows. Tokens must be
+    identical in both, across a ring wrap: the rotation modulus and the
+    valid-prefix mask stay at the LOGICAL capacity."""
+    cfg, params = swat_setup
+    from repro.core.layers import cache_allocation, cache_capacity
+    from repro.core.model import attn_cfg
+    acfg = attn_cfg(cfg, "attn")
+    assert cache_capacity(acfg, 256) == 21
+    assert cache_allocation(acfg, 256) == 32      # rounded tail
+    assert cache_allocation(acfg, 21) == 21       # clamped: no tail
+    rng = np.random.RandomState(10)
+    prompt = rng.randint(0, cfg.vocab_size, (40,)).astype(np.int32)
+    out = {}
+    for max_len in (21, 256):
+        eng = ServingEngine(cfg, params, batch_slots=1, max_len=max_len)
+        out[max_len] = eng.run(
+            [Request(rid=0, prompt=prompt, max_new_tokens=8)])[0].tokens
+    assert out[21] == out[256], out
 
 
 def test_ring_cache_linear_memory():
