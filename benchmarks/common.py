@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing + CSV row emission + JSON artifacts."""
+import json
 import time
 
 import jax
@@ -19,3 +20,17 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str, payload: dict):
+    """Machine-readable benchmark artifact (BENCH_*.json): future PRs diff
+    these files to track the perf trajectory instead of re-deriving numbers
+    from prose. Adds backend/device metadata so deltas across environments
+    are never silently compared."""
+    payload = dict(payload)
+    payload.setdefault("backend", jax.default_backend())
+    payload.setdefault("device_count", jax.device_count())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {path}")

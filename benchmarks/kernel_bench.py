@@ -1,69 +1,264 @@
-"""Microbenchmarks of the three SWAT Pallas kernels (interpret mode on CPU —
-correct-path exercise + relative block-shape comparisons; real speed is a
-TPU property) and their XLA twins (compiled)."""
+"""Microbenchmarks of the SWAT Pallas kernels (interpret mode on CPU —
+correct-path exercise + relative comparisons; real speed is a TPU property)
+and their XLA twins (compiled).
+
+The headline section times the decode hot path before/after the flash-decode
+rework at production GQA shapes:
+
+  before = the PR-2 path: a separate ring-scatter dispatch per call
+           (layers._dyn_update) followed by the per-(batch, q-head) kernel —
+           grid (B, Hq, nb), a (1, D) query row per program (~1/128 MXU tile)
+  after  = the fused kernel: ring insert inside the attention pass
+           (input/output aliasing) with the group = Hq/Hkv query heads
+           packed into one (group*T, D) tile — grid (B, Hkv, nb)
+
+On the interpret backend the measured ratio is dominated by program count
+(grid steps) and per-step work — a proxy for the MXU-utilization win, not a
+TPU number; the BENCH_kernel.json artifact records backend + shapes so
+future PRs compare like with like.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--out BENCH_kernel.json]
+    PYTHONPATH=src python benchmarks/kernel_bench.py --smoke   # CI fast lane
+
+--smoke skips all timing and instead asserts the kernel-shape invariants
+that silently regress otherwise: engine ring allocations tile exactly (no
+pad-and-copy fallback), the fused kernel's insert+attend matches the jnp
+oracle (cache updates bitwise), and packed/unpacked layouts agree.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))  # `python benchmarks/kernel_bench.py` from anywhere
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layers import _round_capacity
+from repro.core.layers import _dyn_update, _round_capacity, cache_allocation
 from repro.core.types import AttentionSpec
-from repro.kernels.ops import swat_attention
+from repro.kernels import ref
+from repro.kernels.ops import decode_attention, swat_attention
 from repro.kernels.swat_decode import decode_block_kv, swat_decode
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
+
+# (B, group, W): the ISSUE-3 production sweep. W=4096 runs only at the
+# acceptance shape (grid cost in interpret mode scales with B*Hq*nb; the
+# relative before/after story is identical at every W).
+GQA_SWEEP = [(8, 1, 512), (8, 4, 512), (8, 8, 512),
+             (32, 1, 512), (32, 4, 512), (32, 8, 512),
+             (8, 8, 4096), (32, 8, 4096)]
+ACCEPT_SHAPE = (32, 8, 4096)
+HKV, D = 2, 64
 
 
-def main():
-    rng = np.random.RandomState(0)
+def _decode_args(rng, b, group, w, t=1, dtype=jnp.bfloat16):
+    hq = group * HKV
+    q = jnp.asarray(rng.randn(b, hq, t, D), dtype)
+    kc = jnp.asarray(rng.randn(b, HKV, w, D), dtype)
+    vc = jnp.asarray(rng.randn(b, HKV, w, D), dtype)
+    nk = jnp.asarray(rng.randn(b, HKV, t, D), dtype)
+    nv = jnp.asarray(rng.randn(b, HKV, t, D), dtype)
+    step = jnp.full((b,), w + 7, jnp.int32)      # wrapped ring, fully valid
+    return q, kc, vc, nk, nv, step
+
+
+def bench_decode_gqa(rng, shapes, iters):
+    """before (scatter + per-head kernel) vs after (fused + GQA-packed)."""
+    rows = []
+    for b, group, w in shapes:
+        q, kc, vc, nk, nv, step = _decode_args(rng, b, group, w)
+
+        def before(q, kc, vc, nk, nv, step):
+            # PR-2 decode: ring scatter pass (full-cache HBM round trip)
+            # then the unpacked (1, D)-row kernel over grid (B, Hq, nb)
+            slot = step % w
+            kci = _dyn_update(kc, nk, slot)
+            vci = _dyn_update(vc, nv, slot)
+            cl = jnp.minimum(step + 1, w)
+            o = swat_decode(q, kci, vci, cl, pack_gqa=False, interpret=True)
+            return o, kci, vci
+
+        def after(q, kc, vc, nk, nv, step):
+            return swat_decode(q, kc, vc, step, new_k=nk, new_v=nv,
+                               interpret=True)
+
+        it = 1 if w >= 4096 else iters   # W=4096 interpret runs are minutes
+        t_b = time_fn(jax.jit(before), q, kc, vc, nk, nv, step,
+                      iters=it, warmup=1)
+        t_a = time_fn(jax.jit(after), q, kc, vc, nk, nv, step,
+                      iters=it, warmup=1)
+        speedup = t_b / t_a
+        emit(f"kernel/decode_gqa_b{b}_g{group}_w{w}_before", t_b, "interpret")
+        emit(f"kernel/decode_gqa_b{b}_g{group}_w{w}_after", t_a,
+             f"speedup {speedup:.2f}x")
+        rows.append({"b": b, "group": group, "hkv": HKV, "w": w, "d": D,
+                     "t": 1, "us_before": t_b, "us_after": t_a,
+                     "speedup": round(speedup, 3)})
+    return rows
+
+
+def bench_multi_token(rng, iters):
+    """T=4 fused step vs 4 sequential fused T=1 steps: the multi-query tile
+    amortizes the full-cache read T times — the speculative-verify win."""
+    b, group, w, t = 8, 4, 512, 4
+    q, kc, vc, nk, nv, step = _decode_args(rng, b, group, w, t=t)
+    cap = w  # dense-style modulus; relative timing only
+
+    def one_shot(q, kc, vc, nk, nv, step):
+        return swat_decode(q, kc, vc, step, new_k=nk, new_v=nv,
+                           ring_cap=cap, interpret=True)
+
+    def sequential(q, kc, vc, nk, nv, step):
+        outs = []
+        for j in range(t):
+            o, kc, vc = swat_decode(q[:, :, j:j + 1], kc, vc, step + j,
+                                    new_k=nk[:, :, j:j + 1],
+                                    new_v=nv[:, :, j:j + 1],
+                                    ring_cap=cap, interpret=True)
+            outs.append(o)
+        return jnp.concatenate(outs, 2), kc, vc
+
+    t_seq = time_fn(jax.jit(sequential), q, kc, vc, nk, nv, step,
+                    iters=iters, warmup=1)
+    t_one = time_fn(jax.jit(one_shot), q, kc, vc, nk, nv, step,
+                    iters=iters, warmup=1)
+    emit(f"kernel/decode_multitoken_t{t}_sequential", t_seq, "interpret")
+    emit(f"kernel/decode_multitoken_t{t}_fused", t_one,
+         f"speedup {t_seq / t_one:.2f}x")
+    return {"b": b, "group": group, "w": w, "t": t, "us_sequential": t_seq,
+            "us_fused": t_one, "speedup": round(t_seq / t_one, 3)}
+
+
+def bench_xla_banded(rng, iters):
     spec = AttentionSpec(kind="swat", window=128, causal=True)
     b, hq, hkv, l, d = 1, 4, 2, 1024, 64
     q = jnp.asarray(rng.randn(b, hq, l, d), jnp.bfloat16)
     k = jnp.asarray(rng.randn(b, hkv, l, d), jnp.bfloat16)
     v = jnp.asarray(rng.randn(b, hkv, l, d), jnp.bfloat16)
-
+    rows = []
     for bq in (64, 128, 256):
         fn = jax.jit(lambda q, k, v: swat_attention(
             q, k, v, spec, block_q=bq, block_kv=bq, impl="xla"))
-        t = time_fn(fn, q, k, v, iters=3, warmup=1)
+        t = time_fn(fn, q, k, v, iters=iters, warmup=1)
         emit(f"kernel/xla_banded_block{bq}", t, f"seq{l}")
+        rows.append({"block": bq, "seq": l, "us": t})
+    return rows
 
-    # decode kernel (ring cache) vs cache size
-    for w in (512, 2048, 8192):
-        kc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
-        vc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
-        qd = jnp.asarray(rng.randn(8, hq, 1, d), jnp.bfloat16)
-        cl = jnp.full((8,), w, jnp.int32)
-        fn = jax.jit(lambda q, k, v, c: swat_decode(q, k, v, c,
-                                                    interpret=True))
-        t = time_fn(fn, qd, kc, vc, cl, iters=2, warmup=1)
-        emit(f"kernel/decode_ring_w{w}", t, "interpret")
 
-    # decode repad before/after: a window+1+globals capacity that is not a
-    # block multiple used to jnp.pad (COPY) both caches on EVERY decode
-    # call; init_kv_cache capacities are now pre-rounded so the hot path
-    # tiles exactly. `before` = the legacy unrounded capacity (falls back
-    # to pad); `after` = the rounded capacity init_kv_cache actually
-    # allocates (must take the no-pad path). 2001 rounds to 2048, so both
-    # sides run the SAME 128-wide grid and the delta isolates the per-call
-    # pad copy (2 * B * Hkv * cap * D bf16 bytes per layer per token).
+def bench_repad(rng, iters):
+    """Decode repad before/after: a window+1+globals capacity that is not a
+    block multiple used to jnp.pad (COPY) both caches on EVERY decode call;
+    init_kv_cache capacities are pre-rounded so the hot path tiles exactly.
+    2001 rounds to 2048, so both sides run the SAME 128-wide grid and the
+    delta isolates the per-call pad copy."""
+    hkv, d = 2, 64
     cap_raw = 1996 + 1 + 4                      # window + 1 + num_global
     cap = _round_capacity(cap_raw)
     blk, pads = decode_block_kv(cap)
-    # ring (sparse-spec) caches from init_kv_cache never pad; dense caps
-    # follow max_len verbatim and may still hit the fallback for odd values
-    assert not pads, (cap, blk)
-    assert cap % blk == 0 and blk == 128, (cap, blk)
+    assert not pads and cap % blk == 0 and blk == 128, (cap, blk)
     assert decode_block_kv(cap_raw)[1], cap_raw  # legacy width DID pad
     copied = 2 * 8 * hkv * cap_raw * d * 2
     emit("kernel/decode_repad_bytes_per_call", float(copied), "eliminated")
+    out = {"bytes_per_call_eliminated": copied}
     for label, w in (("pad_before", cap_raw), ("nopad_after", cap)):
         kc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
         vc = jnp.asarray(rng.randn(8, hkv, w, d), jnp.bfloat16)
-        qd = jnp.asarray(rng.randn(8, hq, 1, d), jnp.bfloat16)
+        qd = jnp.asarray(rng.randn(8, 4, 1, d), jnp.bfloat16)
         cl = jnp.full((8,), w, jnp.int32)
         fn = jax.jit(lambda q, k, v, c: swat_decode(q, k, v, c,
                                                     interpret=True))
-        t = time_fn(fn, qd, kc, vc, cl, iters=2, warmup=1)
+        t = time_fn(fn, qd, kc, vc, cl, iters=iters, warmup=1)
         emit(f"kernel/decode_repad_{label}_w{w}", t, "interpret")
+        out[f"us_{label}"] = t
+    return out
+
+
+def smoke(rng):
+    """CI fast lane: no timing, only the shape/fusion invariants whose
+    silent regressions this file exists to catch."""
+    # 1. engine ring allocations must tile exactly (no pad-and-copy)
+    from repro.core.layers import AttentionLayerCfg
+    for window, g, la in [(64, 0, 0), (128, 4, 0), (255, 4, 3), (16, 0, 1)]:
+        spec = AttentionSpec(kind="swat", window=window, num_global=g,
+                             causal=True)
+        acfg = AttentionLayerCfg(d_model=64, num_heads=4, num_kv_heads=2,
+                                 head_dim=32, spec=spec)
+        alloc = cache_allocation(acfg, 65536, la)
+        blk, pads = decode_block_kv(alloc)
+        assert not pads and alloc % blk == 0, (window, g, la, alloc, blk)
+
+    # 2. fused insert+attend == jnp oracle; cache updates bitwise (broken
+    #    input/output aliasing or slot arithmetic fails here)
+    spec = AttentionSpec(kind="swat", window=24, num_global=4, causal=True)
+    for group, t in [(1, 1), (4, 1), (4, 4)]:
+        cap = spec.window + 1 + (t - 1) + spec.num_global
+        w = _round_capacity(cap)
+        b, hq = 3, group * HKV
+        q = jnp.asarray(rng.randn(b, hq, t, D), jnp.float32)
+        kc = jnp.asarray(rng.randn(b, HKV, w, D), jnp.float32)
+        vc = jnp.asarray(rng.randn(b, HKV, w, D), jnp.float32)
+        nk = jnp.asarray(rng.randn(b, HKV, t, D), jnp.float32)
+        nv = jnp.asarray(rng.randn(b, HKV, t, D), jnp.float32)
+        pos = jnp.asarray([0, 5, 3 * cap + 1][:b], jnp.int32)
+        got = decode_attention(q, kc, vc, None, spec, impl="pallas",
+                               new_kv=(nk, nv), pos=pos, ring_cap=cap,
+                               interpret=True)
+        want = decode_attention(q, kc, vc, None, spec, impl="ref",
+                                new_kv=(nk, nv), pos=pos, ring_cap=cap)
+        np.testing.assert_allclose(got[0], want[0], atol=2e-5, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+    # 3. packed and unpacked layouts agree (plain mode)
+    b, group, w = 2, 4, 256
+    q, kc, vc, _, _, step = _decode_args(rng, b, group, w,
+                                         dtype=jnp.float32)
+    a = swat_decode(q, kc, vc, step, pack_gqa=True, interpret=True)
+    bb = swat_decode(q, kc, vc, step, pack_gqa=False, interpret=True)
+    np.testing.assert_allclose(a, bb, atol=2e-5, rtol=1e-4)
+    print("[kernel_bench] smoke OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: shape/fusion invariants only, no timing")
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args()
+    rng = np.random.RandomState(0)
+    if args.smoke:
+        smoke(rng)
+        return
+
+    payload = {
+        "bench": "kernel", "interpret": True,
+        "note": ("interpret-mode timings: relative before/after only — the "
+                 "ratio tracks program count and per-step work, not TPU "
+                 "wall time"),
+        "decode_gqa": bench_decode_gqa(rng, GQA_SWEEP, args.iters),
+        "decode_multi_token": bench_multi_token(rng, args.iters),
+        "xla_banded": bench_xla_banded(rng, args.iters),
+        "decode_repad": bench_repad(rng, args.iters),
+    }
+    b, g, w = ACCEPT_SHAPE
+    row = next(r for r in payload["decode_gqa"]
+               if (r["b"], r["group"], r["w"]) == ACCEPT_SHAPE)
+    payload["acceptance"] = {
+        "shape": f"B={b} group={g} W={w}",
+        "decode_speedup_vs_pr2": row["speedup"],
+        "required": 2.0,
+        "pass": row["speedup"] >= 2.0,
+    }
+    write_json(args.out, payload)
+    if not payload["acceptance"]["pass"]:
+        print(f"[kernel_bench] FAIL: decode speedup {row['speedup']:.2f}x "
+              "< 2x at the acceptance shape", file=sys.stderr)
+        sys.exit(1)
+    print(f"[kernel_bench] decode speedup at B={b} group={g} W={w}: "
+          f"{row['speedup']:.2f}x (>= 2x required)")
 
 
 if __name__ == "__main__":

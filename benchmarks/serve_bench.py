@@ -20,12 +20,17 @@ Modes compared (same model, same requests, greedy, fixed seed):
                win is a real-multi-chip property.
 
 Also prints ring-cache bytes (SWAT window spec) vs dense at the serving
-context — the paper's Fig. 3 linear-memory claim applied to decode.
+context — the paper's Fig. 3 linear-memory claim applied to decode — and
+writes the whole run to BENCH_serve.json (shapes, tok/s per mode, parity
+flags) so future PRs have a machine-readable perf trajectory to diff.
 """
 import argparse
 import os
 import sys
 import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))  # `python benchmarks/serve_bench.py` from anywhere
 
 import numpy as np
 
@@ -70,6 +75,7 @@ def main():
                     help="force this many host CPU devices (0 = the mesh "
                          "size; must be set before jax initializes, which "
                          "is why this script imports jax late)")
+    ap.add_argument("--out", default="BENCH_serve.json")
     ARGS = ap.parse_args()
 
     mesh_dims = (tuple(int(x) for x in ARGS.mesh.split("x"))
@@ -107,6 +113,17 @@ def main():
           f"speedup {fast_tps / base_tps:.2f}x "
           f"(scan_steps={ARGS.scan_steps} + batched prefill)")
 
+    payload = {
+        "bench": "serve", "arch": ARGS.arch,
+        "requests": ARGS.requests, "slots": ARGS.slots,
+        "prompt_len": ARGS.prompt_len, "new_tokens": ARGS.new_tokens,
+        "scan_steps": ARGS.scan_steps, "window": ARGS.window,
+        "modes": {"seed_style": {"tok_s": round(base_tps, 2)},
+                  "batched": {"tok_s": round(fast_tps, 2),
+                              "speedup_vs_seed":
+                                  round(fast_tps / base_tps, 3)}},
+        "outputs_identical": bool(same),
+    }
     shard_same = True
     if mesh_dims and jax.device_count() < int(np.prod(mesh_dims)):
         # e.g. a non-CPU default backend: the forced-host-device flag only
@@ -135,6 +152,10 @@ def main():
               f"{note}; {shard_tps:.1f} vs {fast_tps:.1f} tok/s "
               f"({shard_tps / fast_tps:.2f}x on forced-{need}-device CPU — "
               f"partitioning overhead, not silicon)")
+        payload["modes"]["sharded"] = {
+            "mesh": ARGS.mesh, "tok_s": round(shard_tps, 2),
+            "identical_to_batched": bool(identical),
+            "slot_parallel": bool(slot_parallel)}
 
     dense = get_smoke_config(ARGS.arch)
     ctx = 65536
@@ -143,6 +164,11 @@ def main():
     print(f"[serve_bench] decode cache @ {ctx} ctx, {ARGS.slots} slots: "
           f"ring {ring / 1e6:.2f}MB vs dense {dn / 1e6:.2f}MB "
           f"({dn / max(ring, 1):.0f}x)")
+    payload["ring_cache"] = {"context": ctx, "ring_bytes": ring,
+                             "dense_bytes": dn,
+                             "ratio": round(dn / max(ring, 1), 1)}
+    from benchmarks.common import write_json
+    write_json(ARGS.out, payload)
     if not same:
         print("[serve_bench] FAIL: modes disagree", file=sys.stderr)
         sys.exit(1)

@@ -153,74 +153,94 @@ def _round_capacity(cap: int) -> int:
     return -(-cap // q) * q
 
 
-def cache_capacity(cfg: AttentionLayerCfg, max_len: int) -> int:
-    """LOGICAL ring capacity: window+1(+globals) for causal sparse attention
-    (the paper's FIFO — decode attends exactly this many rows, never more),
-    full context for dense. `max_len` may be a physical allocation width
-    (`cache["k"].shape[2]`): the logical capacity is recoverable from it
-    because allocations are only ever >= logical (tile rounding)."""
+def cache_capacity(cfg: AttentionLayerCfg, max_len: int,
+                   lookahead: int = 0) -> int:
+    """LOGICAL ring capacity: window+1(+lookahead)(+globals) for causal
+    sparse attention (the paper's FIFO — decode attends at most window+1
+    rows, never more), full context for dense. `lookahead` adds extra ring
+    rows so a T-token decode step (T <= lookahead+1) never overwrites a
+    token still inside some query's window — the multi-token/speculative
+    allocation knob; the attention window itself is unchanged (positional
+    masking in `decode_attention` hides the extra depth). `max_len` may be
+    a physical allocation width (`cache["k"].shape[2]`): the logical
+    capacity is recoverable from it (with the same lookahead) because
+    allocations are only ever >= logical (tile rounding).
+
+    Like `max_len`, `lookahead` is part of the cache GEOMETRY: the same
+    value must reach init_kv_cache/prefill/chunk/decode for one cache (a
+    mismatch rotates at the wrong modulus — it cannot live in the cache
+    dict because the kernel needs it static under jit). The engine threads
+    it everywhere from one knob, `ServingEngine(tokens_per_step=)`."""
     if cfg.spec.is_sparse:
-        cap = cfg.spec.window + 1 + cfg.spec.num_global
+        cap = cfg.spec.window + 1 + lookahead + cfg.spec.num_global
         return min(cap, max_len)
     return max_len
 
 
-def cache_allocation(cfg: AttentionLayerCfg, max_len: int) -> int:
+def cache_allocation(cfg: AttentionLayerCfg, max_len: int,
+                     lookahead: int = 0) -> int:
     """PHYSICAL rows allocated for the ring: the logical capacity rounded up
     to a tile quantum (clamped to max_len). Rows in [logical, physical) are
     never written and never attended (`cache_len` <= logical masks them) —
     they exist purely so the decode kernel's grid tiles the cache exactly
     and the hot path never re-pads. Window semantics are untouched: the
     rotation modulus stays the logical capacity."""
-    cap = cache_capacity(cfg, max_len)
+    cap = cache_capacity(cfg, max_len, lookahead)
     if cfg.spec.is_sparse:
         return min(_round_capacity(cap), max_len)
     return cap
 
 
 def init_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
-                  dtype=jnp.bfloat16):
+                  dtype=jnp.bfloat16, lookahead: int = 0):
     """Ring KV cache with a PER-SLOT write pointer: `step` is (batch,) so a
     continuously-batched decode can serve slots at different depths from one
     kernel call (each row inserts at its own ring position). Allocated at
     `cache_allocation` width (tile-rounded; the tail rows past the logical
-    capacity stay zero and masked forever)."""
-    cap = cache_allocation(cfg, max_len)
+    capacity stay zero and masked forever). lookahead: extra ring rows for
+    T-token decode steps (`cache_capacity`)."""
+    cap = cache_allocation(cfg, max_len, lookahead)
     shape = (batch, cfg.num_kv_heads, cap, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "step": jnp.zeros((batch,), jnp.int32)}
 
 
 def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
-                     impl: str = "ref"):
-    """One-token decode. x: (B, 1, Dm). Ring insertion at (step mod cap) for
-    sparse specs — the paper's FIFO replacement policy (row index mod window).
-    Global tokens occupy pinned slots [0, g) (paper §4.1's fixed K/V buffers);
-    the ring occupies [g, cap). `step` is per-slot (B,): every row rotates,
+                     impl: str = "ref", lookahead: int = 0):
+    """T-token decode. x: (B, T, Dm). Ring insertion at (step mod cap) for
+    sparse specs — the paper's FIFO replacement policy (row index mod window)
+    — happens INSIDE the attention call (`decode_attention(new_kv=)`): the
+    pallas impl writes the new rows into the cache block it already holds in
+    VMEM (input-stationary, Fig. 4b) instead of paying a separate scatter
+    dispatch and full-cache HBM round trip per layer per token; the ref impl
+    scatters-then-attends with identical masks (the parity oracle). Global
+    tokens occupy pinned slots [0, g) (paper §4.1's fixed K/V buffers); the
+    ring occupies [g, cap). `step` is per-slot (B,): every row rotates,
     ropes, and masks at its own depth, which is what lets one batched call
-    serve slots mid-flight at different positions."""
-    b = x.shape[0]
+    serve slots mid-flight at different positions. T > 1 (the speculative-
+    decode verify primitive) needs a cache allocated with lookahead >= T-1
+    so the step's own inserts never evict an in-window token."""
+    b, t, _ = x.shape
     q, k_new, v_new = _project_qkv(params, cfg, x, x)
     step = jnp.broadcast_to(jnp.asarray(cache["step"], jnp.int32), (b,))
     if cfg.use_rope and not cfg.cross:
-        pos = step[:, None, None]                      # (B, 1, 1) per-slot
+        pos = step[:, None, None] + jnp.arange(t, dtype=jnp.int32)  # (B,1,T)
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
     # rotate and mask at the LOGICAL capacity: the allocation may carry a
     # tile-rounding tail of zero rows that must never be written or attended
     # (otherwise the rounding would silently widen the attention window)
-    cap = cache_capacity(cfg, cache["k"].shape[2])
+    cap = cache_capacity(cfg, cache["k"].shape[2], lookahead)
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
-    ring = cap - g
-    slot = jnp.where(step < g, step, g + (step - g) % ring)    # (B,)
-    k_cache = _dyn_update(cache["k"], k_new, slot)
-    v_cache = _dyn_update(cache["v"], v_new, slot)
-    cache_len = jnp.minimum(step + 1, cap)                     # (B,)
-    out = kops.decode_attention(q, k_cache, v_cache,
-                                cache_len.reshape(b, 1, 1, 1),
-                                cfg.spec, impl=impl)
-    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-    new_cache = {"k": k_cache, "v": v_cache, "step": step + 1}
+    assert t == 1 or not cfg.spec.is_sparse \
+        or cap - g >= cfg.spec.window + t, (
+            f"T={t} decode on a {cap - g}-row ring would evict in-window "
+            "tokens: allocate caches with lookahead >= T-1")
+    out, k_cache, v_cache = kops.decode_attention(
+        q, cache["k"], cache["v"], None, cfg.spec, impl=impl,
+        new_kv=(k_new, v_new), pos=step, ring_cap=cap)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    new_cache = {"k": k_cache, "v": v_cache, "step": step + t}
     return out @ params["wo"], new_cache
 
 
@@ -265,7 +285,7 @@ def ring_scatter(cache_kv, new, positions, write, g: int, ring):
 
 
 def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
-                     positions=None, lengths=None):
+                     positions=None, lengths=None, lookahead: int = 0):
     """Fill a cache from a prompt (B, L, Dm). For ring caches only the last
     `cap` tokens are retained (earlier ones are outside every future window).
 
@@ -278,8 +298,9 @@ def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
     if cfg.use_rope and not cfg.cross:
         pos = jnp.arange(l) if positions is None else positions
         k = apply_rope(k, pos, cfg.rope_theta)
-    cap = cache_capacity(cfg, max_len)
-    cache = init_kv_cache(cfg, b, max_len, dtype=k.dtype)
+    cap = cache_capacity(cfg, max_len, lookahead)
+    cache = init_kv_cache(cfg, b, max_len, dtype=k.dtype,
+                          lookahead=lookahead)
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     if l <= cap:
         # no wrap possible: natural slots. Rows shorter than L carry pad K/V
@@ -306,7 +327,7 @@ def prefill_kv_cache(params: Params, cfg: AttentionLayerCfg, x, max_len: int,
 
 
 def attention_prefill_chunk(params: Params, cfg: AttentionLayerCfg, x, cache,
-                            pos0, lengths):
+                            pos0, lengths, lookahead: int = 0):
     """One chunk of a batched chunked prefill: attend tokens [pos0, pos0+T)
     against the ring cache (all earlier chunks) plus the chunk itself, then
     append the chunk's K/V to the ring.
@@ -328,7 +349,7 @@ def attention_prefill_chunk(params: Params, cfg: AttentionLayerCfg, x, cache,
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
     cap_phys = cache["k"].shape[2]
-    cap = cache_capacity(cfg, cap_phys)    # logical: rotation modulus
+    cap = cache_capacity(cfg, cap_phys, lookahead)  # logical: rot. modulus
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     ring = cap - g
     w = cfg.spec.window if cfg.spec.is_sparse else cap + t  # dense: no band

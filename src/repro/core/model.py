@@ -261,11 +261,12 @@ def loss_fn(params: Params, cfg: ModelConfig, batch, *,
 # --------------------------------------------------------------- serving ---
 
 def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                      enc_len: int = 0):
+                      enc_len: int = 0, lookahead: int = 0):
     dt = _dtype(cfg)
     if kind.startswith("mamba"):
         return S.init_mamba_cache(cfg.d_model, cfg.ssm, batch, dtype=dt)
-    cache = L.init_kv_cache(attn_cfg(cfg, kind), batch, max_len, dtype=dt)
+    cache = L.init_kv_cache(attn_cfg(cfg, kind), batch, max_len, dtype=dt,
+                            lookahead=lookahead)
     if kind == "xattn":
         shape = (batch, cfg.num_kv_heads, max(enc_len, 1),
                  cfg.resolved_head_dim)
@@ -275,23 +276,27 @@ def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                enc_len: int = 0) -> Params:
-    """Stacked (num_super_blocks leading dim) decode caches."""
+                enc_len: int = 0, lookahead: int = 0) -> Params:
+    """Stacked (num_super_blocks leading dim) decode caches. lookahead:
+    extra ring rows per layer so a (lookahead+1)-token decode step never
+    evicts an in-window token (`layers.cache_capacity`)."""
     def one(_):
-        return {f"l{i}": _layer_cache_init(cfg, kind, batch, max_len, enc_len)
+        return {f"l{i}": _layer_cache_init(cfg, kind, batch, max_len,
+                                           enc_len, lookahead)
                 for i, kind in enumerate(cfg.layer_pattern)}
     caches = jax.vmap(one)(jnp.arange(cfg.num_super_blocks))
     return caches
 
 
 def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
-                        impl: str = "ref"):
+                        impl: str = "ref", lookahead: int = 0):
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind.startswith("mamba"):
         y, new_cache = S.mamba_decode(p["mixer"], h, cache, cfg.ssm)
     else:
         y, new_cache = L.attention_decode(p["mixer"], attn_cfg(cfg, kind), h,
-                                          cache, impl=impl)
+                                          cache, impl=impl,
+                                          lookahead=lookahead)
     x = x + y
     if kind == "xattn":
         h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
@@ -301,7 +306,7 @@ def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
             q, cache["xk"], cache["xv"],
             jnp.full((x.shape[0], 1, 1, 1), cache["xk"].shape[2], jnp.int32),
             ccfg.spec)
-        out = out.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, -1)
+        out = out.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], -1)
         x = x + out @ p["cross"]["wo"]
         new_cache = {**new_cache, "xk": cache["xk"], "xv": cache["xv"]}
     if "moe" in p:
@@ -316,16 +321,24 @@ def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
 
 def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
                 impl: str = "xla", unroll: bool = False,
-                act_sharding=None):
-    """One token for every sequence. batch: {"tokens": (B, 1)} (or
-    {"embeddings": (B, 1, D)}). Per-slot cache steps: rows may sit at
-    different positions (continuous batching). impl="pallas" routes the
-    cache attention through the swat_decode kernel; anything else uses the
-    jnp reference. act_sharding: optional (B, 1, D) sharding pinned at every
-    super-block boundary — under a serving mesh this keeps the decode
+                act_sharding=None, lookahead: int = 0):
+    """T tokens for every sequence (usually T=1). batch:
+    {"tokens": (B, T)} (or {"embeddings": (B, T, D)}). Per-slot cache
+    steps: rows may sit at different positions (continuous batching).
+    T > 1 is the speculative-decode verify primitive: the whole stack runs
+    once for T draft tokens, each query masked to its own causal/window
+    slice of the ring (attention-pattern configs only — mamba state updates
+    are sequential), and needs caches allocated with lookahead >= T-1.
+    impl="pallas" routes the cache attention through the fused swat_decode
+    kernel (ring insert + attention in one pass); anything else uses the
+    jnp reference. act_sharding: optional (B, T, D) sharding pinned at
+    every super-block boundary — under a serving mesh this keeps the decode
     residual stream slot-sharded instead of letting SPMD replicate it
-    between blocks. Returns (logits (B, 1, V), new caches)."""
+    between blocks. Returns (logits (B, T, V), new caches)."""
     x = embed_tokens(params, cfg, batch)
+    assert x.shape[1] == 1 or all(
+        not k.startswith("mamba") for k in cfg.layer_pattern), \
+        "multi-token decode: mamba layers update state one token at a time"
     dec_impl = "pallas" if impl == "pallas" else "ref"
 
     def block_fn(x, inp):
@@ -333,7 +346,8 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
         new_caches = {}
         for i, kind in enumerate(cfg.layer_pattern):
             x, nc = _apply_layer_decode(blk_p[f"l{i}"], cfg, kind, x,
-                                        blk_cache[f"l{i}"], impl=dec_impl)
+                                        blk_cache[f"l{i}"], impl=dec_impl,
+                                        lookahead=lookahead)
             new_caches[f"l{i}"] = nc
         return L.with_activation_constraint(x, act_sharding), new_caches
 
@@ -345,7 +359,7 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
 
 def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
             impl: str = "xla", unroll: bool = False, lengths=None,
-            act_sharding=None):
+            act_sharding=None, lookahead: int = 0):
     """Run the prompt, return (last-position logits, primed caches).
 
     Implemented as forward + cache extraction per layer: each attention layer
@@ -380,7 +394,8 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
                 acfg = attn_cfg(cfg, kind)
                 y = L.attention_layer(p["mixer"], acfg, h, impl=impl)
                 cache = L.prefill_kv_cache(p["mixer"], acfg, h, max_len,
-                                           lengths=lengths)
+                                           lengths=lengths,
+                                           lookahead=lookahead)
             x = x + y
             if kind == "xattn":
                 h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
@@ -424,7 +439,7 @@ def prefill_chunkable(cfg: ModelConfig) -> bool:
 
 
 def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
-                  lengths, act_sharding=None):
+                  lengths, act_sharding=None, lookahead: int = 0):
     """One lockstep chunk of a batched chunked prefill: run tokens
     [pos0, pos0+T) through the stack against the ring caches and append to
     them. Exact-band equal to single-shot `prefill`, but per-layer score
@@ -446,7 +461,7 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
             h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
             y, nc = L.attention_prefill_chunk(
                 p["mixer"], attn_cfg(cfg, kind), h, blk_cache[f"l{i}"],
-                pos0, lengths)
+                pos0, lengths, lookahead=lookahead)
             x = x + y
             if "moe" in p:
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)

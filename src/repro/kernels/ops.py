@@ -277,28 +277,110 @@ def swat_attention(q, k, v, spec: AttentionSpec, *,
     return out
 
 
+def _per_slot(x, b: int):
+    """Normalize scalar / (B,) / (B,1,1,1) spellings to (B,) int32:
+    broadcast, never reshape — a scalar reshaped to (B,) crashes for B > 1
+    even though a shared length is the common cross-attention case
+    (model.py passes a full()'d (B,1,1,1))."""
+    x = jnp.asarray(x, jnp.int32)
+    return jnp.broadcast_to(x.reshape(()) if x.size == 1 else x.reshape(b),
+                            (b,))
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
                      scale: Optional[float] = None, impl: str = "ref",
-                     interpret: Optional[bool] = None):
-    """One-token decode vs a (ring) KV cache. cache_len is per-slot
-    ((B,) or (B,1,1,1)): a continuously-batched engine serves slots at
-    different ring depths from this one call.
+                     interpret: Optional[bool] = None,
+                     new_kv=None, num_new=None, pos=None,
+                     ring_cap: Optional[int] = None):
+    """Decode T >= 1 tokens vs a (ring) KV cache. q: (B, Hq, T, D).
+    cache_len / pos / num_new are per-slot (scalar, (B,) or (B,1,1,1)): a
+    continuously-batched engine serves slots at different ring depths from
+    this one call.
+
+    * plain (new_kv=None): the cache already holds everything;
+      `cache_len` is the valid count and the query tokens are its newest.
+    * fused (new_kv=(k_new, v_new), each (B, Hkv, T, D)): the step's K/V
+      rows are inserted at their ring slots AND attended in the same pass —
+      on the pallas impl inside the kernel's VMEM-resident block (no
+      separate scatter dispatch, no second full-cache HBM round trip);
+      the ref impl scatters then attends (the unfused parity oracle —
+      identical masks, op-for-op the engine's pre-fusion jnp path).
+      `pos` (required) counts tokens BEFORE the insert; `num_new` optionally
+      ragged-limits how many of the T rows are real per slot (speculative
+      accepts). Returns (out, k_cache, v_cache).
+
+    Masks are positional: `ring_cap` is the LOGICAL rotation modulus
+    (defaults to the cache width), spec.num_global the pinned prefix, and
+    spec.window is enforced by token distance — so a cache allocated wider
+    than window+1 rows (lookahead rings, dense caps) no longer attends its
+    entire valid prefix (the old behavior silently dropped the window).
 
     impl="ref" is the jnp path (CPU tests, dry-run lowering); "pallas" is
     the swat_decode flash kernel (the TPU hot path; interpret mode
-    elsewhere). Both mask the same per-slot valid prefix, and ring order is
-    irrelevant either way — softmax is permutation invariant."""
-    b = q.shape[0]
-    # accept scalar / (B,) / (B,1,1,1): broadcast, never reshape — a scalar
-    # reshaped to (B,) crashes for B > 1 even though a shared length is the
-    # common cross-attention case (model.py passes a full()'d (B,1,1,1))
-    cl = jnp.asarray(cache_len, jnp.int32)
-    cl = jnp.broadcast_to(cl.reshape(()) if cl.size == 1 else cl.reshape(b),
-                          (b,))
+    elsewhere). Ring order is irrelevant either way — softmax is
+    permutation invariant."""
+    b, _, t, _ = q.shape
+    w_phys = k_cache.shape[2]
+    cap = w_phys if ring_cap is None else int(ring_cap)
+    g = spec.num_global if spec.is_sparse else 0
+    window = spec.window if spec.is_sparse else 0
+    fuse = new_kv is not None
+    if fuse:
+        assert pos is not None, "fused insert needs per-slot `pos`"
+        assert t <= cap - g, (
+            f"{t} new tokens would overwrite each other in a {cap - g}-row "
+            "ring: allocate the cache with lookahead >= T-1")
+        assert t == 1 or not (spec.is_sparse and spec.window) \
+            or cap - g >= spec.window + t, (
+                f"T={t} fused decode on a {cap - g}-row ring would evict "
+                "tokens still inside early queries' windows (sequential "
+                "equivalence needs ring >= window + T): allocate with "
+                "lookahead >= T-1")
+    if (spec.is_sparse and spec.window and cap > spec.window + 1 + g
+            and pos is None):
+        # cache_len is CLAMPED (min(step, cap)) and loses the ring phase:
+        # reconstructing slot positions from it on a wrapped wider-than-band
+        # ring would window-mask the wrong slots — silently. Demand the
+        # absolute count instead of guessing.
+        raise ValueError(
+            "window masking on a cache wider than window+1+globals needs "
+            "absolute per-slot `pos=` (cache_len is clamped and loses the "
+            "ring phase after a wrap)")
+    assert fuse or cache_len is not None or pos is not None, (
+        "plain decode needs cache_len (valid prefix) or pos (absolute "
+        "token count) — with neither, every slot would mask empty and the "
+        "output would be silently all-zero")
+    cl = _per_slot(cache_len if cache_len is not None else 0, b)
+    pos = cl if pos is None else _per_slot(pos, b)
+    nn = (jnp.full((b,), t, jnp.int32) if num_new is None
+          else _per_slot(num_new, b))
     if impl == "pallas":
         from repro.kernels.swat_decode import swat_decode
         interpret = default_interpret() if interpret is None else interpret
-        return swat_decode(q, k_cache, v_cache, cl,
-                           scale=scale, softcap=spec.softcap,
-                           interpret=interpret)
+        k_new, v_new = new_kv if fuse else (None, None)
+        return swat_decode(q, k_cache, v_cache, pos,
+                           new_k=k_new, new_v=v_new,
+                           num_new=nn if fuse else None,
+                           ring_cap=cap, num_global=g, window=window,
+                           causal=spec.causal, scale=scale,
+                           softcap=spec.softcap, interpret=interpret)
+    if fuse:
+        k_new, v_new = new_kv
+        k_cache = ref_impl.ring_insert_ref(k_cache, k_new, pos, nn,
+                                           ring_cap=cap, num_global=g)
+        v_cache = ref_impl.ring_insert_ref(v_cache, v_new, pos, nn,
+                                           ring_cap=cap, num_global=g)
+        out = ref_impl.decode_ref(q, k_cache, v_cache, None, spec,
+                                  scale=scale, total=pos + nn, q0=pos,
+                                  ring_cap=cap)
+        return out, k_cache, v_cache
+    if t > 1 or (spec.is_sparse and spec.window
+                 and cap > spec.window + 1 + g):
+        # positional masks: multi-token queries need per-token causality,
+        # and a cache wider than the band would otherwise attend stale
+        # tokens through the prefix mask alone (the bug this path fixes).
+        # Queries are the cache's newest tokens (pre-inserted convention).
+        return ref_impl.decode_ref(q, k_cache, v_cache, None, spec,
+                                   scale=scale, total=pos, q0=pos - t,
+                                   ring_cap=cap)
     return ref_impl.decode_ref(q, k_cache, v_cache, cl, spec, scale=scale)

@@ -152,32 +152,96 @@ def sliding_chunks_ref(q, k, v, spec: AttentionSpec, *,
     return out.reshape(b, h, l, d).astype(q.dtype)
 
 
+def ring_slot_positions(total, wcap: int, *, ring_cap: int, num_global: int):
+    """Which absolute token index each cache slot holds, given per-slot
+    `total` (B,) tokens inserted so far. Pinned slot s (< num_global) holds
+    token s; ring slot r holds the newest token congruent to r below
+    `total`. Returns (positions (B, W) int32, valid (B, W) bool); slots in
+    the tile-rounding tail [ring_cap, W) are never valid."""
+    g, ring = num_global, ring_cap - num_global
+    s_idx = jnp.arange(wcap, dtype=jnp.int32)[None, :]
+    last = jnp.asarray(total, jnp.int32).reshape(-1, 1) - 1
+    t_ring = last - jnp.mod((last - g) - (s_idx - g), ring)
+    t_s = jnp.where(s_idx < g, s_idx, t_ring)
+    valid = jnp.where(s_idx < g, s_idx <= last, t_ring >= g)
+    return t_s, valid & (s_idx < ring_cap)
+
+
+def ring_insert_ref(cache, new, pos, num_new, *, ring_cap: int,
+                    num_global: int):
+    """Insert `new` (B, H, T, D) rows at their ring slots of `cache`
+    (B, H, W, D): token pos+j -> slot g + (pos+j-g) mod ring (pinned below
+    g); rows j >= num_new[b] are not written. Implemented as iota==slot
+    selects (ascending j: last writer wins), the SPMD-safe form
+    layers._dyn_update uses — for T=1 this is op-for-op that function."""
+    b, _, wcap, _ = cache.shape
+    t = new.shape[2]
+    g, ring = num_global, ring_cap - num_global
+    pos = jnp.asarray(pos, jnp.int32).reshape(b)
+    num_new = jnp.asarray(num_new, jnp.int32).reshape(b)
+    for j in range(t):
+        pj = pos + j
+        slot = jnp.where(pj < g, pj, g + jnp.mod(pj - g, ring))
+        hit = ((jnp.arange(wcap, dtype=jnp.int32)[None, :] == slot[:, None])
+               & (j < num_new)[:, None])[:, None, :, None]
+        cache = jnp.where(hit, new[:, :, j:j + 1].astype(cache.dtype), cache)
+    return cache
+
+
 def decode_ref(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
-               scale: Optional[float] = None):
-    """One-token decode against a (ring) cache. q: (B, Hq, 1, D),
-    caches: (B, Hkv, W, D). Only the first min(cache_len, W) entries are
-    valid. Ring order is irrelevant (softmax is permutation invariant).
+               scale: Optional[float] = None, total=None, q0=None,
+               ring_cap: Optional[int] = None):
+    """Decode T query tokens against a (ring) cache. q: (B, Hq, T, D),
+    caches: (B, Hkv, W, D). Ring order is irrelevant (softmax is permutation
+    invariant). Two masking modes:
+
+    * prefix (total=None, the legacy T=1 call): only the first
+      min(cache_len, W) entries are valid; no window/causal terms.
+    * positional (total/q0 given, (B,)): every slot's absolute token index
+      is reconstructed from the ring layout (`ring_slot_positions` —
+      rotation modulus ring_cap, pinned prefix spec.num_global) and query
+      token q0+t sees a slot iff its token is causally past and within
+      spec.window (globals always). This is the oracle for the fused
+      multi-token pallas kernel, including caches wider than the window.
 
     Numerics note: scores come from a mixed-precision dot_general with fp32
     accumulation — never from an fp32 *copy* of the cache. Materializing
     `k_cache.astype(f32)` doubles decode HBM traffic and shows up as a
     convert-op FLOP avalanche in the roofline (EXPERIMENTS.md §Perf it.1)."""
-    b, hq, _, d = q.shape
+    b, hq, t, d = q.shape
     hkv, wcap = k_cache.shape[1], k_cache.shape[2]
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
-    qg = q.reshape(b, hkv, group, d)
-    # (B, Hkv, G, W) <- (B, Hkv, G, D) x (B, Hkv, W, D), fp32 accumulate
+    qg = q.reshape(b, hkv, group * t, d)
+    # (B, Hkv, G*T, W) <- (B, Hkv, G*T, D) x (B, Hkv, W, D), fp32 accumulate
     from repro.kernels import dots
     s = dots.dot_general_f32(
         qg, k_cache, (((3,), (3,)), ((0, 1), (0, 1)))) * scale
     s = _soft_cap(s, spec.softcap)
-    valid = (jnp.arange(wcap)[None, None, None, :]
-             < jnp.minimum(cache_len.reshape(b, 1, 1, 1), wcap))
+    if total is None:
+        assert t == 1, "multi-token decode_ref needs positional masks"
+        valid = (jnp.arange(wcap)[None, None, None, :]
+                 < jnp.minimum(cache_len.reshape(b, 1, 1, 1), wcap))
+    else:
+        cap = wcap if ring_cap is None else ring_cap
+        g = spec.num_global if spec.is_sparse else 0
+        t_s, ok = ring_slot_positions(total, wcap, ring_cap=cap, num_global=g)
+        trow = jnp.arange(group * t, dtype=jnp.int32) % t
+        qp = (jnp.asarray(q0, jnp.int32).reshape(b, 1)
+              + trow[None, :])                         # (B, G*T)
+        vis = ok[:, None, :]                           # (B, G*T, W)
+        if spec.causal:
+            vis = vis & (t_s[:, None, :] <= qp[:, :, None])
+        if spec.is_sparse and spec.window:
+            keep = t_s[:, None, :] >= qp[:, :, None] - spec.window
+            if g > 0:
+                keep = keep | (jnp.arange(wcap) < g)[None, None, :]
+            vis = vis & keep
+        valid = vis[:, None]                           # (B, 1, G*T, W)
     s = jnp.where(valid, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(valid, p, 0.0)
     out = dots.dot_general_f32(
         p.astype(v_cache.dtype), v_cache,
-        (((3,), (2,)), ((0, 1), (0, 1))))          # (B, Hkv, G, D)
-    return out.reshape(b, hq, 1, d).astype(q.dtype)
+        (((3,), (2,)), ((0, 1), (0, 1))))          # (B, Hkv, G*T, D)
+    return out.reshape(b, hq, t, d).astype(q.dtype)

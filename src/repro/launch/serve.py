@@ -48,6 +48,9 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--decode-impl", choices=("ref", "pallas"),
                     default="ref")
+    ap.add_argument("--tokens-per-step", type=int, default=1,
+                    help="ring lookahead for multi-token decode steps "
+                         "(speculative-decode hook; tokens unchanged)")
     ap.add_argument("--mesh", default=None,
                     help="device mesh 'DxM' (e.g. 2x2) — sharded serving; "
                          "default: single-device")
@@ -73,6 +76,7 @@ def main():
         prefill_chunk=args.prefill_chunk,
         max_prefill_tokens=args.max_prefill_tokens,
         top_k=args.top_k, decode_impl=args.decode_impl,
+        tokens_per_step=args.tokens_per_step,
         mesh=mesh, profile=args.profile)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(

@@ -72,18 +72,27 @@ class Result:
 
 class _Compiled:
     """Jitted functions shared by every engine over the same
-    (cfg, max_len, decode_impl, top_k, mesh, profile): compiles are
-    per-model, engines are cheap per-session objects (constructing a second
-    engine must not pay XLA again — `_get_compiled` memoizes these).
+    (cfg, max_len, decode_impl, top_k, mesh, profile, tokens_per_step):
+    compiles are per-model, engines are cheap per-session objects
+    (constructing a second engine must not pay XLA again — `_get_compiled`
+    memoizes these).
+
+    tokens_per_step sizes the ring lookahead (caches get T-1 extra ring
+    rows so a T-token decode step never evicts an in-window token) and is
+    part of the compile identity: every cache shape, prefill, and scan
+    program depends on it — the speculative-decode hook.
 
     With a mesh, every function is keyed by its batch-row count so each
     shape gets exact `in_shardings`/`out_shardings` (the sharding rules are
     divisibility-aware, so specs depend on the concrete row count)."""
 
     def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
-                 top_k: int, mesh=None, profile: str = "tp"):
+                 top_k: int, mesh=None, profile: str = "tp",
+                 tokens_per_step: int = 1):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
+        self.tokens_per_step = tokens_per_step
+        self.lookahead = tokens_per_step - 1
         self.mesh, self.profile = mesh, profile
         if mesh is not None:
             from repro.distributed import sharding as Sh
@@ -106,7 +115,8 @@ class _Compiled:
     # ------------------------------------------------------- sharding maps --
     def cache_sharding(self, n: int):
         shapes = jax.eval_shape(
-            lambda: Mod.init_caches(self.cfg, n, self.max_len))
+            lambda: Mod.init_caches(self.cfg, n, self.max_len,
+                                    lookahead=self.lookahead))
         return self._Sh.cache_sharding(shapes, self.mesh)
 
     def batch_sharding(self, shapes, n: int, slot_dim: int = 0):
@@ -142,7 +152,8 @@ class _Compiled:
             def fn(p, tok, lens):
                 return Mod.prefill(p, self.cfg, {"tokens": tok},
                                    max_len=self.max_len, lengths=lens,
-                                   act_sharding=act)
+                                   act_sharding=act,
+                                   lookahead=self.lookahead)
             if self.mesh is None:
                 self._prefill_fns[n] = jax.jit(fn)
             else:
@@ -182,7 +193,7 @@ class _Compiled:
         gathered (B, 1, D) row is unembedded — never the whole chunk."""
         x, caches = Mod.prefill_chunk(
             params, self.cfg, {"tokens": tok}, caches, pos0, lengths,
-            act_sharding=act_sharding)
+            act_sharding=act_sharding, lookahead=self.lookahead)
         t = tok.shape[1]
         tpos = lengths - 1 - pos0
         hit = (tpos >= 0) & (tpos < t)
@@ -229,7 +240,8 @@ class _Compiled:
         if n not in self._init_fns:
             out_sh = None if self.mesh is None else self.cache_sharding(n)
             self._init_fns[n] = jax.jit(
-                lambda: Mod.init_caches(self.cfg, n, self.max_len),
+                lambda: Mod.init_caches(self.cfg, n, self.max_len,
+                                        lookahead=self.lookahead),
                 out_shardings=out_sh)
         return self._init_fns[n]()
 
@@ -242,6 +254,7 @@ class _Compiled:
 
     def _make_scan(self, n: int, slots: int):
         cfg, impl, top_k = self.cfg, self.decode_impl, self.top_k
+        lookahead = self.lookahead
         act = self._act_sharding(slots)
 
         def fn(params, caches, tok, active, budget, temps, key):
@@ -249,7 +262,7 @@ class _Compiled:
                 caches, tok, active, budget, key = carry
                 logits, caches = Mod.decode_step(
                     params, cfg, {"tokens": tok[:, None]}, caches, impl=impl,
-                    act_sharding=act)
+                    act_sharding=act, lookahead=lookahead)
                 key, sub = jax.random.split(key)
                 nxt = sampling.sample(sub, logits[:, 0], temps, top_k)
                 nxt = jnp.where(active, nxt, tok)
@@ -279,8 +292,10 @@ class _Compiled:
 
 @functools.lru_cache(maxsize=16)
 def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
-                  top_k: int, mesh=None, profile: str = "tp") -> _Compiled:
-    return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile)
+                  top_k: int, mesh=None, profile: str = "tp",
+                  tokens_per_step: int = 1) -> _Compiled:
+    return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
+                     tokens_per_step)
 
 
 class ServingEngine:
@@ -289,11 +304,18 @@ class ServingEngine:
                  batch_prefill: bool = True, prefill_chunk: int = 0,
                  max_prefill_tokens: int = 8192, pad_to: int = 16,
                  top_k: int = 0, decode_impl: str = "ref",
-                 mesh=None, profile: str = "tp"):
+                 mesh=None, profile: str = "tp", tokens_per_step: int = 1):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
         call (the seed behavior, kept for benchmarking).
+
+        tokens_per_step: ring lookahead for multi-token decode steps — the
+        caches carry T-1 extra ring rows and every compiled entry point is
+        keyed by it, so a future speculative-decode step can verify T draft
+        tokens per dispatch on these caches. Generated tokens are unchanged
+        (the positional window mask hides the extra ring depth); the decode
+        loop itself still emits one token per scan step.
 
         mesh: optional jax.sharding.Mesh — params are placed once at
         construction (`param_sharding(profile)`), caches/decode state carry
@@ -310,10 +332,11 @@ class ServingEngine:
                               if Mod.prefill_chunkable(cfg) else 0)
         self.top_k = top_k
         self.decode_impl = decode_impl
+        self.tokens_per_step = max(1, tokens_per_step)
         self.mesh, self.profile = mesh, profile
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
-                                profile)
+                                profile, self.tokens_per_step)
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
         self.scheduler = Scheduler(

@@ -225,6 +225,196 @@ def test_decode_block_kv_never_pads_rounded_capacities(rng):
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
 
 
+def _fifo_ring_caches(rng, lens, hkv, cap, alloc, d, num_global=0,
+                      dtype=np.float32):
+    """Build per-slot ring caches by simulating sequential FIFO insertion
+    (pinned globals below num_global, ring above), plus the linear "last
+    window" layout for dense-reference checks. Returns (k_ring, v_ring)."""
+    b = len(lens)
+    kc = np.zeros((b, hkv, alloc, d), dtype)
+    vc = np.zeros((b, hkv, alloc, d), dtype)
+    ring = cap - num_global
+    for i, ln in enumerate(lens):
+        hk = rng.randn(hkv, max(ln, 1), d).astype(dtype)
+        hv = rng.randn(hkv, max(ln, 1), d).astype(dtype)
+        for t in range(ln):
+            slot = t if t < num_global else (num_global
+                                             + (t - num_global) % ring)
+            kc[i, :, slot] = hk[:, t]
+            vc[i, :, slot] = hv[:, t]
+    return kc, vc
+
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+@pytest.mark.parametrize("t", [1, 4])
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_decode_fused_parity_sweep(group, t, dtype, atol, rng):
+    """The ISSUE-3 acceptance sweep: the fused pallas kernel (GQA-packed
+    query tile, in-kernel ring insert) matches the jnp oracle across
+    group in {1,4,8}, T in {1,4}, bf16/fp32, and mixed per-slot depths —
+    cold slots, partially filled, freshly wrapped, multiply wrapped. Cache
+    updates must be BITWISE identical (broken aliasing shows up here)."""
+    spec = AttentionSpec(kind="swat", window=12, num_global=4, causal=True)
+    hkv, d = 2, 32
+    hq = group * hkv
+    cap = spec.window + 1 + (t - 1) + spec.num_global  # lookahead ring
+    from repro.core.layers import _round_capacity
+    alloc = _round_capacity(cap)                       # tile-rounded tail
+    lens = [0, 3, cap - 1, cap, 4 * cap + 7]           # per-slot depths
+    b = len(lens)
+    np_dtype = np.float32
+    kc, vc = _fifo_ring_caches(rng, lens, hkv, cap, alloc, d,
+                               num_global=spec.num_global, dtype=np_dtype)
+    kc, vc = jnp.asarray(kc, dtype), jnp.asarray(vc, dtype)
+    q = jnp.asarray(rng.randn(b, hq, t, d), dtype)
+    nk = jnp.asarray(rng.randn(b, hkv, t, d), dtype)
+    nv = jnp.asarray(rng.randn(b, hkv, t, d), dtype)
+    pos = jnp.asarray(lens, jnp.int32)
+    nn = jnp.asarray([t, t, max(1, t - 1), t, t], jnp.int32)  # ragged
+    o_ref, kr, vr = decode_attention(q, kc, vc, None, spec, impl="ref",
+                                     new_kv=(nk, nv), num_new=nn, pos=pos,
+                                     ring_cap=cap)
+    o_pal, kp, vp = decode_attention(q, kc, vc, None, spec, impl="pallas",
+                                     new_kv=(nk, nv), num_new=nn, pos=pos,
+                                     ring_cap=cap, interpret=True)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(kp))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vp))
+    for i in range(b):
+        real = int(nn[i])    # rows past num_new are garbage by contract
+        np.testing.assert_allclose(
+            np.asarray(o_pal[i, :, :real], np.float32),
+            np.asarray(o_ref[i, :, :real], np.float32),
+            atol=atol, rtol=1e-2, err_msg=f"slot {i}")
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_decode_multi_token_equals_sequential(impl, rng):
+    """A T=4 fused decode call == 4 sequential T=1 fused calls, outputs and
+    final caches alike — the property speculative-decode verification
+    stands on. Needs the lookahead ring (T-1 extra rows): without it the
+    step's own inserts would evict tokens still inside early queries'
+    windows."""
+    spec = AttentionSpec(kind="swat", window=10, num_global=2, causal=True)
+    hkv, group, t, d = 2, 3, 4, 16
+    hq = hkv * group
+    cap = spec.window + 1 + (t - 1) + spec.num_global
+    lens = [0, 5, 3 * cap + 2]
+    b = len(lens)
+    kc, vc = _fifo_ring_caches(rng, lens, hkv, cap, cap, d,
+                               num_global=spec.num_global)
+    kc, vc = jnp.asarray(kc), jnp.asarray(vc)
+    q = jnp.asarray(rng.randn(b, hq, t, d), jnp.float32)
+    nk = jnp.asarray(rng.randn(b, hkv, t, d), jnp.float32)
+    nv = jnp.asarray(rng.randn(b, hkv, t, d), jnp.float32)
+    pos = jnp.asarray(lens, jnp.int32)
+    out, kA, vA = decode_attention(q, kc, vc, None, spec, impl=impl,
+                                   new_kv=(nk, nv), pos=pos, ring_cap=cap,
+                                   interpret=True)
+    outs = []
+    for j in range(t):
+        o1, kc, vc = decode_attention(
+            q[:, :, j:j + 1], kc, vc, None, spec, impl=impl,
+            new_kv=(nk[:, :, j:j + 1], nv[:, :, j:j + 1]),
+            pos=pos + j, ring_cap=cap, interpret=True)
+        outs.append(o1)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.concatenate(outs, 2)),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(kA), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(vA), np.asarray(vc))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_decode_window_masked_on_wide_cache(impl, rng):
+    """Regression (ISSUE 3): a cache allocated wider than the ring capacity
+    (dense-capped / lookahead allocations) used to attend the ENTIRE valid
+    prefix — spec.window was silently dropped. Both impls must mask by
+    per-slot ring distance: only the last window+1 tokens (plus pinned
+    globals) are visible."""
+    spec = AttentionSpec(kind="swat", window=8, causal=True)
+    b, hq, hkv, W, L, d = 1, 4, 2, 64, 40, 16
+    kc = jnp.asarray(rng.randn(b, hkv, W, d), jnp.float32)
+    vc = jnp.asarray(rng.randn(b, hkv, W, d), jnp.float32)
+    q = jnp.asarray(rng.randn(b, hq, 1, d), jnp.float32)
+    nk = jnp.asarray(rng.randn(b, hkv, 1, d), jnp.float32)
+    nv = jnp.asarray(rng.randn(b, hkv, 1, d), jnp.float32)
+    pos = jnp.asarray([L], jnp.int32)
+    got, _, _ = decode_attention(q, kc, vc, None, spec, impl=impl,
+                                 new_kv=(nk, nv), pos=pos, ring_cap=W,
+                                 interpret=True)
+    # oracle: dense attention over ONLY the in-window tail (linear layout:
+    # token i at slot i; query at L sees [L-8, L])
+    kw = jnp.concatenate([kc[:, :, L - 8:L], nk], axis=2)
+    vw = jnp.concatenate([vc[:, :, L - 8:L], nv], axis=2)
+    want = ref.decode_ref(q, kw, vw, jnp.full((b, 1, 1, 1), 9, jnp.int32),
+                          AttentionSpec(kind="dense"))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+    # and the buggy behavior is measurably different: attending the whole
+    # prefix gives a different answer
+    wide = ref.decode_ref(q, kc.at[:, :, L].set(nk[:, :, 0]),
+                          vc.at[:, :, L].set(nv[:, :, 0]),
+                          jnp.full((b, 1, 1, 1), L + 1, jnp.int32),
+                          AttentionSpec(kind="dense"))
+    assert not np.allclose(np.asarray(got), np.asarray(wide), atol=1e-3)
+
+
+def test_decode_fused_equals_unfused_bitwise(rng):
+    """The fused ref path (insert inside decode_attention) must be
+    OP-FOR-OP the PR-2 unfused path (layers._dyn_update scatter, then
+    prefix-masked attention): bitwise-equal caches AND outputs at T=1 on a
+    standard ring. This is what keeps serving tokens byte-stable across
+    the refactor (the slot-parallel mesh parity test rides on it)."""
+    from repro.core.layers import _dyn_update
+    spec = AttentionSpec(kind="swat", window=12, num_global=4, causal=True)
+    hkv, group, d = 2, 2, 16
+    hq = hkv * group
+    cap = spec.window + 1 + spec.num_global
+    lens = [0, 5, cap, 3 * cap + 2]
+    b = len(lens)
+    kc, vc = _fifo_ring_caches(rng, lens, hkv, cap, cap, d,
+                               num_global=spec.num_global)
+    kc, vc = jnp.asarray(kc), jnp.asarray(vc)
+    q = jnp.asarray(rng.randn(b, hq, 1, d), jnp.float32)
+    nk = jnp.asarray(rng.randn(b, hkv, 1, d), jnp.float32)
+    nv = jnp.asarray(rng.randn(b, hkv, 1, d), jnp.float32)
+    step = jnp.asarray(lens, jnp.int32)
+    fused, kf, vf = decode_attention(q, kc, vc, None, spec, impl="ref",
+                                     new_kv=(nk, nv), pos=step,
+                                     ring_cap=cap)
+    g, ring = spec.num_global, cap - spec.num_global
+    slot = jnp.where(step < g, step, g + (step - g) % ring)
+    ku = _dyn_update(kc, nk, slot)
+    vu = _dyn_update(vc, nv, slot)
+    unfused = decode_attention(q, ku, vu,
+                               jnp.minimum(step + 1, cap), spec, impl="ref")
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ku))
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vu))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+def test_decode_pad_fallback_warns_once(rng, caplog):
+    """The pad-and-copy fallback (cache width with no sublane-aligned
+    divisor) must log a one-time warning naming the offending W — the
+    silent full-cache copy per token is exactly what went unnoticed before
+    the pre-rounded allocations."""
+    import logging
+    from repro.kernels import swat_decode as sd
+    w = 37  # no divisor >= 16 shared with 128
+    assert decode_block_kv(w)[1]
+    sd._PAD_WARNED.discard(w)
+    b, hq, hkv, d = 1, 2, 1, 32
+    q = jnp.asarray(rng.randn(b, hq, 1, d), jnp.float32)
+    kc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    vc = jnp.asarray(rng.randn(b, hkv, w, d), jnp.float32)
+    cl = jnp.full((b,), w, jnp.int32)
+    with caplog.at_level(logging.WARNING, logger=sd.logger.name):
+        swat_decode(q, kc, vc, cl, interpret=True)
+        swat_decode(q, kc, vc, cl, interpret=True)
+    hits = [r for r in caplog.records if "W=37" in r.getMessage()]
+    assert len(hits) == 1, [r.getMessage() for r in caplog.records]
+
+
 def test_decode_per_slot_ring_offsets(rng):
     """One batched swat_decode call serving slots at DIFFERENT ring depths
     (cold, exactly-full, wrapped, multiply-wrapped): each row's ring-laid-out

@@ -312,6 +312,80 @@ def test_allocation_rounding_does_not_widen_window(swat_setup):
     assert out[21] == out[256], out
 
 
+def test_tokens_per_step_lookahead_token_identical(swat_setup):
+    """tokens_per_step=T allocates T-1 extra ring rows per cache (the
+    speculative-decode hook) — and the generated tokens must be IDENTICAL
+    to the tps=1 engine: the positional window mask hides the extra ring
+    depth (without it, decode on the wider ring would attend one stale
+    token and every output would drift). Exercises the ISSUE-3 window
+    bugfix end-to-end through prefill, chunked or not, and scan decode."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (40, 9, 26)]
+
+    def run(tps, **kw):
+        eng = ServingEngine(cfg, params, batch_slots=2, max_len=256,
+                            scan_steps=4, seed=5, tokens_per_step=tps, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6,
+                        temperature=[0.0, 2.0, 0.0][i])
+                for i, p in enumerate(prompts)]
+        return {r.rid: r.tokens for r in eng.run(reqs)}
+
+    base = run(1)
+    assert run(4) == base
+    assert run(4, prefill_chunk=8) == base
+
+
+def test_decode_step_multi_token_matches_loop(swat_setup):
+    """model.decode_step with T=4 tokens == 4 sequential T=1 steps (logits
+    and caches): the multi-query primitive the speculative-decode verify
+    loop needs, exact because the lookahead ring keeps every query's window
+    resident through the step's own inserts."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(12)
+    prompt = rng.randint(0, cfg.vocab_size, (20,)).astype(np.int32)
+    t = 4
+    _, caches = Mod.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None]},
+                            max_len=128, lookahead=t - 1)
+    toks = rng.randint(0, cfg.vocab_size, (1, t)).astype(np.int32)
+    multi, mcaches = Mod.decode_step(params, cfg,
+                                     {"tokens": jnp.asarray(toks)}, caches,
+                                     lookahead=t - 1)
+    seq_logits = []
+    for j in range(t):
+        lg, caches = Mod.decode_step(params, cfg,
+                                     {"tokens": jnp.asarray(toks[:, j:j + 1])},
+                                     caches, lookahead=t - 1)
+        seq_logits.append(lg)
+    np.testing.assert_allclose(np.asarray(multi),
+                               np.asarray(jnp.concatenate(seq_logits, 1)),
+                               atol=1e-4, rtol=1e-4)
+    for la, lb in zip(jax.tree.leaves(mcaches), jax.tree.leaves(caches)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_engine_pallas_decode_impl_serves(swat_setup):
+    """decode_impl="pallas" (the fused swat_decode kernel, interpret mode on
+    CPU) serves every request to its exact budget and matches the ref-impl
+    engine greedily: same masks, kernel-accumulated numerics."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(13)
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (12, 25)]
+
+    def run(impl):
+        eng = ServingEngine(cfg, params, batch_slots=2, max_len=128,
+                            scan_steps=4, seed=3, decode_impl=impl)
+        return {r.rid: r.tokens
+                for r in eng.run([Request(rid=i, prompt=p, max_new_tokens=5)
+                                  for i, p in enumerate(prompts)])}
+
+    assert run("pallas") == run("ref")
+
+
 def test_ring_cache_linear_memory():
     """Paper Fig. 3: dense decode memory grows with context; SWAT's ring
     stays flat at O(window)."""
