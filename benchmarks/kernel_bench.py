@@ -52,6 +52,14 @@ GQA_SWEEP = [(8, 1, 512), (8, 4, 512), (8, 8, 512),
 ACCEPT_SHAPE = (32, 8, 4096)
 HKV, D = 2, 64
 
+# Known fused-vs-PR2 loss shapes, TRACKED not silent: at group<=4 and small
+# W the packed tile is mostly padding, so the fused kernel loses to the
+# scatter+per-head path (0.34-0.86x on the interpret backend). The
+# shape-adaptive dispatch item on the ROADMAP exists to reclaim these; any
+# OTHER shape dropping below 1.0x — or these getting materially worse —
+# must fail the smoke gate, not scroll by.
+EXPECTED_REGRESSIONS = {(8, 1, 512), (32, 1, 512), (32, 4, 512)}
+
 
 def _decode_args(rng, b, group, w, t=1, dtype=jnp.bfloat16):
     hq = group * HKV
@@ -218,7 +226,50 @@ def smoke(rng):
     a = swat_decode(q, kc, vc, step, pack_gqa=True, interpret=True)
     bb = swat_decode(q, kc, vc, step, pack_gqa=False, interpret=True)
     np.testing.assert_allclose(a, bb, atol=2e-5, rtol=1e-4)
+
+    # 4. perf-regression guard over the committed benchmark artifact: the
+    #    flagship decode speedup must hold its floor, and every sub-1.0x
+    #    shape must be on the tracked list — a NEW loss shape (or a
+    #    stale/deleted artifact) fails CI instead of scrolling by.
+    check_benchmark_artifact()
     print("[kernel_bench] smoke OK")
+
+
+def check_benchmark_artifact(path=None):
+    """Gate on the repo's BENCH_kernel.json (the artifact the timing run
+    writes): flagship (B=32, group=8, W=4096) fused speedup >= the
+    recorded `required` floor (2.0x), and no untracked regressions."""
+    import json
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_kernel.json")
+    with open(path) as f:
+        payload = json.load(f)
+    acc = payload["acceptance"]
+    required = float(acc.get("required", 2.0))
+    got = float(acc["decode_speedup_vs_pr2"])
+    assert got >= required, (
+        f"flagship decode speedup {got:.2f}x < {required:.1f}x at "
+        f"{acc['shape']} — the fused hot path regressed (or the artifact "
+        "was regenerated on a slower path); investigate before merging")
+    losses = {(r["b"], r["group"], r["w"]): r["speedup"]
+              for r in payload["decode_gqa"] if r["speedup"] < 1.0}
+    untracked = set(losses) - EXPECTED_REGRESSIONS
+    assert not untracked, (
+        f"NEW decode loss shapes {sorted(untracked)} (speedups "
+        f"{ {s: losses[s] for s in untracked} }) are not in "
+        "EXPECTED_REGRESSIONS — either fix the regression or track it "
+        "explicitly here with a ROADMAP pointer")
+    recovered = EXPECTED_REGRESSIONS - {
+        (r["b"], r["group"], r["w"]) for r in payload["decode_gqa"]
+        if r["speedup"] < 1.0}
+    missing = EXPECTED_REGRESSIONS - {
+        (r["b"], r["group"], r["w"]) for r in payload["decode_gqa"]}
+    print(f"[kernel_bench] artifact gate: flagship {got:.2f}x >= "
+          f"{required:.1f}x; tracked losses "
+          f"{sorted(set(losses) & EXPECTED_REGRESSIONS)}"
+          + (f"; RECOVERED (untrack them): {sorted(recovered - missing)}"
+             if recovered - missing else ""))
 
 
 def main():

@@ -18,6 +18,13 @@ Modes compared (same model, same requests, greedy, fixed seed):
                host CPU devices share the same silicon, so tok/s here
                measures partitioning overhead, not speedup — the sharded
                win is a real-multi-chip property.
+  speculative: draft/verify/accept decode (k n-gram drafts verified per
+               dispatch) vs the same engine at speculative=0, on a model
+               briefly fitted to a repetitive corpus so greedy output has
+               the self-similarity real workloads carry (random-init
+               weights emit undraftable noise — recorded separately as
+               the speculative_random diagnostic). Tokens must be
+               IDENTICAL to sequential decode; the run fails below 1.3x.
 
 Also prints ring-cache bytes (SWAT window spec) vs dense at the serving
 context — the paper's Fig. 3 linear-memory claim applied to decode — and
@@ -36,25 +43,91 @@ import numpy as np
 
 
 def run_mode(cfg, params, reqs, *, scan_steps, batch_prefill, max_len,
-             label, mesh=None, warm=True):
+             label, mesh=None, warm=True, speculative=0, draft=None,
+             reps=1):
     from repro.serving.engine import ServingEngine
+
+    kw = {}
+    if speculative:
+        kw.update(speculative=speculative, draft=draft)
 
     def once():
         eng = ServingEngine(cfg, params, batch_slots=ARGS.slots,
                             max_len=max_len, scan_steps=scan_steps,
-                            batch_prefill=batch_prefill, mesh=mesh)
+                            batch_prefill=batch_prefill, mesh=mesh, **kw)
         t0 = time.perf_counter()
         results = eng.run(list(reqs))
         dt = time.perf_counter() - t0
-        return results, dt
+        return results, dt, eng
 
     if warm:           # first run pays jit compiles for this mode's shapes
         once()
-    results, dt = once()
+    # median over reps: 64-token runs finish in tens of ms, where scheduler
+    # jitter swamps a single sample (speculative-vs-sequential especially)
+    samples = sorted((once() for _ in range(reps)), key=lambda s: s[1])
+    results, dt, eng = samples[len(samples) // 2]
     n = sum(len(r.tokens) for r in results)
-    print(f"[serve_bench] {label:<10} {n:4d} tokens in {dt:6.2f}s "
+    print(f"[serve_bench] {label:<16} {n:4d} tokens in {dt:6.2f}s "
           f"-> {n / dt:8.1f} tok/s")
-    return results, n / dt
+    return results, n / dt, eng
+
+
+def fit_selfsim(cfg, params, steps, Mod):
+    """Fit the smoke model to a tiny repetitive corpus (seeded motifs,
+    tiled) so greedy continuations carry the self-similarity real serving
+    workloads have. Random-INIT weights emit near-chaotic trajectories no
+    drafter can predict (acceptance ~0.1, recorded below as the
+    speculative_random diagnostic), which says nothing about the engine —
+    speculation is always benched on models whose output is predictable
+    enough to draft. ~tens of seconds on CPU, fully deterministic."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(7)
+    motifs = [rng.randint(0, cfg.vocab_size, (int(l),)).astype(np.int32)
+              for l in rng.randint(4, 13, size=16)]
+
+    def batch_of(bs, seq=96):
+        idx = rng.randint(0, len(motifs), size=bs)
+        rows = [np.tile(motifs[i], seq // len(motifs[i]) + 1)[:seq]
+                for i in idx]
+        x = jnp.asarray(np.stack(rows).astype(np.int32))
+        return {"tokens": x, "labels": x}
+
+    try:
+        import optax
+        opt = optax.adam(3e-3)
+    except ImportError:                      # plain momentum SGD fallback
+        class _SGD:
+            def init(self, p):
+                return jax.tree.map(jnp.zeros_like, p)
+
+            def update(self, g, m):
+                m = jax.tree.map(lambda m, g: 0.9 * m + g, m, g)
+                return jax.tree.map(lambda m: -0.05 * m, m), m
+        import types
+        optax = types.SimpleNamespace(apply_updates=lambda p, u: jax.tree.map(
+            lambda p, u: p + u, p, u))
+        opt = _SGD()
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (_, aux), g = jax.value_and_grad(Mod.loss_fn, has_aux=True)(
+            params, cfg, batch)
+        upd, state = opt.update(g, state)
+        return optax.apply_updates(params, upd), state, aux["loss"]
+
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        params, state, loss = step(params, state, batch_of(16))
+    print(f"[serve_bench] fit {steps} steps on motif corpus in "
+          f"{time.perf_counter() - t0:.1f}s (loss {float(loss):.3f})")
+    prompts = [np.tile(motifs[i % len(motifs)],
+                       ARGS.prompt_len // len(motifs[i % len(motifs)]) + 1)
+               [:ARGS.prompt_len].astype(np.int32)
+               for i in range(ARGS.requests)]
+    return params, prompts
 
 
 def main():
@@ -75,6 +148,16 @@ def main():
                     help="force this many host CPU devices (0 = the mesh "
                          "size; must be set before jax initializes, which "
                          "is why this script imports jax late)")
+    ap.add_argument("--speculative", type=int, default=4,
+                    help="draft depth k for the speculative section "
+                         "(0 disables it)")
+    ap.add_argument("--fit-steps", type=int, default=200,
+                    help="optimizer steps fitting the smoke model to the "
+                         "self-similar corpus the speculative section "
+                         "decodes")
+    ap.add_argument("--spec-reps", type=int, default=5,
+                    help="timing repetitions (median) for the "
+                         "speculative/sequential comparison")
     ap.add_argument("--out", default="BENCH_serve.json")
     ARGS = ap.parse_args()
 
@@ -101,12 +184,13 @@ def main():
         0, cfg.vocab_size, (ARGS.prompt_len,)).astype(np.int32),
         max_new_tokens=ARGS.new_tokens) for i in range(ARGS.requests)]
 
-    base, base_tps = run_mode(cfg, params, reqs, scan_steps=1,
-                              batch_prefill=False, max_len=ARGS.max_len,
-                              label="seed-style")
-    fast, fast_tps = run_mode(cfg, params, reqs, scan_steps=ARGS.scan_steps,
-                              batch_prefill=True, max_len=ARGS.max_len,
-                              label="batched")
+    base, base_tps, _ = run_mode(cfg, params, reqs, scan_steps=1,
+                                 batch_prefill=False, max_len=ARGS.max_len,
+                                 label="seed-style")
+    fast, fast_tps, _ = run_mode(cfg, params, reqs,
+                                 scan_steps=ARGS.scan_steps,
+                                 batch_prefill=True, max_len=ARGS.max_len,
+                                 label="batched")
 
     same = all(a.tokens == b.tokens for a, b in zip(base, fast))
     print(f"[serve_bench] outputs identical: {same}; "
@@ -135,7 +219,7 @@ def main():
               file=sys.stderr)
     elif mesh_dims:
         mesh = parse_mesh(ARGS.mesh)
-        shard, shard_tps = run_mode(
+        shard, shard_tps, _ = run_mode(
             cfg, params, reqs, scan_steps=ARGS.scan_steps,
             batch_prefill=True, max_len=ARGS.max_len,
             label=f"sharded/{ARGS.mesh}", mesh=mesh)
@@ -157,6 +241,64 @@ def main():
             "identical_to_batched": bool(identical),
             "slot_parallel": bool(slot_parallel)}
 
+    # ------------------------------------------------- speculative decode --
+    spec_ok = True
+    if ARGS.speculative:
+        from repro.serving.drafter import NGramDrafter
+
+        draft = NGramDrafter(max_ngram=3, history=64)
+        # diagnostic first: speculation on the incompressible random-token
+        # workload above. Acceptance collapses and the k-wide verify is a
+        # pure compute tax — the expected, recorded loss that motivates the
+        # self-similar workload below.
+        _, rand_tps, rand_eng = run_mode(
+            cfg, params, reqs, scan_steps=ARGS.scan_steps,
+            batch_prefill=True, max_len=ARGS.max_len,
+            label="spec/random", speculative=ARGS.speculative, draft=draft)
+        print(f"[serve_bench] spec on random tokens: acceptance "
+              f"{rand_eng.acceptance_rate:.3f} -> "
+              f"{rand_tps / fast_tps:.2f}x vs batched (expected loss)")
+
+        fit_params, fit_prompts = fit_selfsim(cfg, params, ARGS.fit_steps,
+                                              Mod)
+        fit_reqs = [Request(rid=i, prompt=p,
+                            max_new_tokens=ARGS.new_tokens)
+                    for i, p in enumerate(fit_prompts)]
+        seqr, seq_tps, _ = run_mode(
+            cfg, fit_params, fit_reqs, scan_steps=ARGS.scan_steps,
+            batch_prefill=True, max_len=ARGS.max_len,
+            label="sequential/fit", reps=ARGS.spec_reps)
+        specr, spec_tps, spec_eng = run_mode(
+            cfg, fit_params, fit_reqs, scan_steps=ARGS.scan_steps,
+            batch_prefill=True, max_len=ARGS.max_len,
+            label=f"speculative/k={ARGS.speculative}",
+            speculative=ARGS.speculative, draft=draft, reps=ARGS.spec_reps)
+        spec_same = all(a.tokens == b.tokens for a, b in zip(seqr, specr))
+        spec_speedup = spec_tps / seq_tps
+        print(f"[serve_bench] speculative vs sequential: identical "
+              f"{spec_same}; {spec_speedup:.2f}x at acceptance "
+              f"{spec_eng.acceptance_rate:.3f} "
+              f"({spec_eng.stats['spec_steps']} verify steps for "
+              f"{spec_eng.stats['tokens_emitted']} tokens)")
+        payload["modes"]["sequential_selfsim"] = {
+            "tok_s": round(seq_tps, 2), "fit_steps": ARGS.fit_steps}
+        payload["modes"]["speculative"] = {
+            "tok_s": round(spec_tps, 2),
+            "speedup_vs_sequential": round(spec_speedup, 3),
+            "acceptance_rate": round(spec_eng.acceptance_rate, 4),
+            "k": ARGS.speculative,
+            "draft": {"kind": "ngram", "max_ngram": draft.max_ngram,
+                      "history": draft.history},
+            "identical_to_sequential": bool(spec_same),
+            "verify_steps": spec_eng.stats["spec_steps"],
+        }
+        payload["modes"]["speculative_random"] = {
+            "tok_s": round(rand_tps, 2),
+            "acceptance_rate": round(rand_eng.acceptance_rate, 4),
+            "expected_loss": True,
+        }
+        spec_ok = spec_same and spec_speedup >= 1.3
+
     dense = get_smoke_config(ARGS.arch)
     ctx = 65536
     ring = ring_cache_bytes(cfg, ARGS.slots, ctx)
@@ -177,6 +319,10 @@ def main():
         sys.exit(1)
     if fast_tps <= base_tps:
         print("[serve_bench] FAIL: batched mode not faster", file=sys.stderr)
+        sys.exit(1)
+    if not spec_ok:
+        print("[serve_bench] FAIL: speculative decode below the 1.3x bar "
+              "or not token-identical", file=sys.stderr)
         sys.exit(1)
 
 

@@ -438,6 +438,16 @@ def prefill_chunkable(cfg: ModelConfig) -> bool:
         for k in cfg.layer_pattern)
 
 
+def speculative_supported(cfg: ModelConfig) -> bool:
+    """Whether the serving engine may run speculative decode on this
+    config: every layer's decode state must be a ring KV cache whose
+    `step` pointer can be rolled back after a rejected draft (mamba's
+    recurrent state and xattn's encoder memory have no such rollback), and
+    positions must be rotary so a (B, T) verify step is position-exact.
+    The single source of truth for the engine's `speculative=` gate."""
+    return prefill_chunkable(cfg)
+
+
 def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
                   lengths, act_sharding=None, lookahead: int = 0):
     """One lockstep chunk of a batched chunked prefill: run tokens

@@ -51,6 +51,13 @@ def main():
     ap.add_argument("--tokens-per-step", type=int, default=1,
                     help="ring lookahead for multi-token decode steps "
                          "(speculative-decode hook; tokens unchanged)")
+    ap.add_argument("--speculative", type=int, default=0,
+                    help="draft tokens per decode step (0 = sequential); "
+                         "greedy output is token-identical either way")
+    ap.add_argument("--draft-ngram", type=int, default=3,
+                    help="n-gram drafter: longest context suffix to match")
+    ap.add_argument("--draft-history", type=int, default=64,
+                    help="n-gram drafter: per-slot token history length")
     ap.add_argument("--mesh", default=None,
                     help="device mesh 'DxM' (e.g. 2x2) — sharded serving; "
                          "default: single-device")
@@ -63,6 +70,7 @@ def main():
     from repro.configs import get_config, get_smoke_config, with_swat
     from repro.core import model as Mod
     from repro.launch.mesh import parse_mesh
+    from repro.serving.drafter import NGramDrafter
     from repro.serving.engine import Request, ServingEngine, ring_cache_bytes
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -77,6 +85,9 @@ def main():
         max_prefill_tokens=args.max_prefill_tokens,
         top_k=args.top_k, decode_impl=args.decode_impl,
         tokens_per_step=args.tokens_per_step,
+        speculative=args.speculative,
+        draft=NGramDrafter(max_ngram=args.draft_ngram,
+                           history=args.draft_history),
         mesh=mesh, profile=args.profile)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(
@@ -90,10 +101,13 @@ def main():
     mdesc = "single-device" if mesh is None else (
         "x".join(str(s) for s in mesh.devices.shape)
         + f" mesh ({args.profile})")
+    spec = (f", speculative={args.speculative} "
+            f"(acceptance {engine.acceptance_rate:.2f})"
+            if args.speculative else "")
     print(f"[serve] {len(results)} requests / {n} tokens in {dt:.1f}s "
           f"({n / dt:.1f} tok/s; scan_steps={args.scan_steps}, "
           f"batch_prefill={args.batch_prefill}, "
-          f"prefill_chunk={args.prefill_chunk}, {mdesc})")
+          f"prefill_chunk={args.prefill_chunk}, {mdesc}{spec})")
     print(f"[serve] cache bytes @max_len: "
           f"{ring_cache_bytes(cfg, args.slots, args.max_len) / 1e6:.1f}MB")
 

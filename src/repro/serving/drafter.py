@@ -1,0 +1,131 @@
+"""Draft proposers for speculative decoding.
+
+Speculative decode splits every engine step into (draft, verify, accept):
+a cheap proposer guesses the next `k` tokens, the full model verifies all
+k+1 positions in ONE `decode_step` dispatch (the PR-3 multi-query
+primitive: each draft token gets its own causal/window slice of the
+lookahead ring), and the engine keeps the longest prefix of drafts that
+match what the model itself would have emitted. Acceptance only changes
+*speed* — every emitted token is exactly the model's own output for its
+(verified) prefix, so greedy speculative decode is token-for-token the
+sequential engine (tests/test_speculative.py pins this down end-to-end).
+
+The proposer here is the zero-extra-model option: **n-gram self-drafting**
+(prompt-lookup decoding). Each slot carries a small rolling history of its
+own tokens (prompt + everything emitted); to draft, we find the most
+recent — longest-suffix-match — earlier occurrence of the current context
+and propose the tokens that followed it. Window-attention serving is a
+particularly good fit: SWA-trained models hold quality at long context by
+leaning on local structure, and local structure (templated output, code,
+retrieval-stuffed prompts, greedy decode's own loops) is exactly what an
+n-gram matcher predicts well. The interface is deliberately small and the
+spec is a frozen dataclass (it is part of the engine's compile key), so a
+learned small-model drafter can slot in later without touching the engine
+loop.
+
+Everything here is device-resident and shape-static: `propose` and
+`observe` are called inside the engine's jitted decode body (no host
+round trips), state is a right-aligned (slots, history) ring the engine
+threads like any other per-slot decode state (it shards over the slot
+axis under a mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NGramDrafter:
+    """Self-drafting n-gram proposer (prompt-lookup decoding).
+
+    max_ngram: longest context suffix to match (longer matches win; ties go
+        to the most recent occurrence).
+    history:  per-slot token history kept on device, newest token at the
+        END of the buffer (right-aligned — suffix extraction is static).
+
+    Frozen/hashable on purpose: the drafter spec is part of the engine's
+    compile identity (`_get_compiled`), like `tokens_per_step`.
+    """
+    max_ngram: int = 3
+    history: int = 64
+
+    # ------------------------------------------------------------- state --
+    def init_state(self, slots: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(hist (slots, H) int32, count (slots,) int32) host mirrors —
+        the engine owns them exactly like slot_last/slot_budget."""
+        return (np.zeros((slots, self.history), np.int32),
+                np.zeros((slots,), np.int32))
+
+    def seed_row(self, tokens: np.ndarray) -> Tuple[np.ndarray, np.int32]:
+        """History row for a freshly admitted slot: the prompt plus the
+        prefill-sampled first token, right-aligned into the buffer."""
+        h = self.history
+        seq = np.asarray(tokens, np.int32).reshape(-1)[-h:]
+        row = np.zeros((h,), np.int32)
+        if seq.size:
+            row[h - seq.size:] = seq
+        return row, np.int32(seq.size)
+
+    # ------------------------------------------------------------ propose --
+    def propose(self, hist, count, k: int):
+        """Draft k tokens per slot. hist: (B, H) right-aligned (newest at
+        H-1 — the slot's current last token); count: (B,) valid entries.
+
+        For every candidate match end p (an earlier history position), the
+        match score is the longest n <= max_ngram with
+        hist[p-n+1 .. p] == hist[H-n .. H-1] (the current context suffix).
+        The winner is the longest match, most recent on ties; drafts are
+        the tokens that followed it. Slots with no match propose their last
+        token repeated — any proposal is *correct* (verification gates
+        emission), a bad one just wastes the lookahead."""
+        b, h = hist.shape
+        idx = jnp.arange(h, dtype=jnp.int32)[None, :]          # (1, H)
+        count = jnp.asarray(count, jnp.int32)
+        first = h - jnp.minimum(count, h)[:, None]             # (B, 1)
+        score = jnp.zeros((b, h), jnp.int32)
+        for n in range(1, self.max_ngram + 1):
+            m = count[:, None] >= n + 1   # suffix of n + >=1 token before it
+            for i in range(n):
+                src = idx - (n - 1) + i
+                tok = jnp.take_along_axis(
+                    hist, jnp.clip(src, 0, h - 1), axis=1)     # (B, H)
+                suf = hist[:, h - n + i][:, None]              # (B, 1)
+                m = m & (tok == suf) & (src >= first)
+            score = jnp.where(m, n, score)
+        # a candidate needs a continuation: strictly before the newest token
+        usable = (idx <= h - 2) & (idx >= first)
+        score = jnp.where(usable, score, 0)
+        rank = score * h + idx                   # longer match, then recency
+        best = jnp.argmax(rank, axis=1)                        # (B,)
+        has = jnp.take_along_axis(score, best[:, None], 1)[:, 0] > 0
+        gather = jnp.clip(best[:, None] + 1 + jnp.arange(k)[None, :],
+                          0, h - 1)
+        drafts = jnp.take_along_axis(hist, gather, axis=1)     # (B, k)
+        last = hist[:, h - 1][:, None]
+        return jnp.where(has[:, None], drafts, last)
+
+    # ------------------------------------------------------------ observe --
+    def observe(self, hist, count, tokens, num_emitted):
+        """Append each slot's first `num_emitted` of `tokens` (B, T) to its
+        history (ragged per slot; num_emitted=0 rows are untouched).
+        Right-aligned shift via one gather — no per-row branches."""
+        b, h = hist.shape
+        e = jnp.asarray(num_emitted, jnp.int32)
+        buf = jnp.concatenate([hist, jnp.asarray(tokens, hist.dtype)], axis=1)
+        gather = e[:, None] + jnp.arange(h, dtype=jnp.int32)[None, :]
+        return (jnp.take_along_axis(buf, gather, axis=1),
+                jnp.minimum(count + e, h))
+
+
+def get_drafter(spec) -> NGramDrafter:
+    """Normalize the engine's `draft=` knob: None -> default NGramDrafter,
+    a drafter instance passes through. The seam where a small-model drafter
+    config would be resolved later."""
+    if spec is None:
+        return NGramDrafter()
+    assert isinstance(spec, NGramDrafter), spec
+    return spec

@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import model as Mod
 from repro.core.types import ModelConfig
 from repro.serving import sampling
+from repro.serving.drafter import NGramDrafter, get_drafter
 from repro.serving.scheduler import PrefillPlan, Scheduler, normalize_prompt
 
 
@@ -88,11 +89,14 @@ class _Compiled:
 
     def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
                  top_k: int, mesh=None, profile: str = "tp",
-                 tokens_per_step: int = 1):
+                 tokens_per_step: int = 1, speculative: int = 0,
+                 draft: Optional[NGramDrafter] = None):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
         self.tokens_per_step = tokens_per_step
         self.lookahead = tokens_per_step - 1
+        self.speculative = speculative
+        self.drafter = get_drafter(draft) if speculative else None
         self.mesh, self.profile = mesh, profile
         if mesh is not None:
             from repro.distributed import sharding as Sh
@@ -110,6 +114,7 @@ class _Compiled:
         self._insert_fns: Dict[Tuple[int, int], Any] = {}
         self._sample_fns: Dict[int, Any] = {}
         self._scan_fns: Dict[Tuple[int, int], Any] = {}
+        self._spec_fns: Dict[Tuple[int, int], Any] = {}
         self._init_fns: Dict[int, Any] = {}
 
     # ------------------------------------------------------- sharding maps --
@@ -138,11 +143,11 @@ class _Compiled:
                 size *= self.mesh.shape[a]
         return size if size > 1 and slots % size == 0 else 1
 
-    def _act_sharding(self, n: int):
+    def _act_sharding(self, n: int, t: int = 1):
         if self.mesh is None:
             return None
         return self.batch_sharding(
-            self._sds((n, 1, self.cfg.d_model), jnp.float32), n)
+            self._sds((n, t, self.cfg.d_model), jnp.float32), n)
 
     # ------------------------------------------------------------ prefill --
     def prefill(self, n: int):
@@ -289,13 +294,139 @@ class _Compiled:
                           vecf, self._rep),
             out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk))
 
+    # ------------------------------------------------------- speculative --
+    def spec_scan(self, n: int, slots: int):
+        key = (n, slots)
+        if key not in self._spec_fns:
+            self._spec_fns[key] = self._make_spec_scan(n, slots)
+        return self._spec_fns[key]
+
+    def _make_spec_scan(self, n: int, slots: int):
+        """n draft/verify/accept steps per dispatch. Each step feeds the
+        model (B, T=k+1) tokens — the slot's pending token plus k drafts —
+        in ONE `decode_step` (the PR-3 lookahead-ring primitive), then:
+
+          accept   logits[:, j] is the model's next-token distribution
+                   given x[:, :j+1], so draft x[:, j+1] is kept iff it
+                   equals the model's own choice ver[:, j]; `acc` is the
+                   longest all-match prefix and the step emits e = acc+1
+                   tokens — acc verified drafts plus the model's bonus
+                   token after them. Every emitted token is the model's
+                   output for a fully verified prefix, hence greedy spec
+                   decode is bitwise the sequential engine.
+          rollback `decode_step` advanced every ring `step` by T and wrote
+                   T rows; setting step -= T - e keeps exactly the rows a
+                   sequential engine would hold after e tokens. The T-e
+                   rejected rows are garbage but DEAD: the lookahead rows
+                   mean no in-window token was evicted, the stale slots
+                   reconstruct (ring_slot_positions) to positions the
+                   window/validity mask drops, and the very next step's
+                   T-row insert starts at step and overwrites all of them
+                   before any attention read. Inactive slots take e=0, so
+                   their step is restored exactly (no drift).
+          budget   e is clamped per slot to the remaining budget, so a
+                   slot never overshoots mid-block; done slots go
+                   inactive and the loop exits early when none remain.
+
+        A `lax.while_loop` (not scan) so the RNG key splits once per
+        EXECUTED step — the same determinism contract as the sequential
+        scan. Verify positions sample under fold_in(sub, j); greedy rows
+        ignore the key entirely, which is why the identity guarantee is
+        greedy-only (sampled rows are distributionally exact — each token
+        is drawn conditioned on a verified prefix — but ride a different
+        key stream than sequential decode)."""
+        cfg, impl, top_k = self.cfg, self.decode_impl, self.top_k
+        k = self.speculative
+        t = k + 1
+        assert self.lookahead >= k, (self.lookahead, k)
+        drafter = self.drafter
+        act = self._act_sharding(slots, t)
+
+        def fn(params, caches, tok, active, budget, temps, key, hist, hcnt):
+            toks0 = jnp.zeros((n, slots, t), jnp.int32)
+            emit0 = jnp.zeros((n, slots, t), jnp.bool_)
+            active0 = active
+
+            def cond(carry):
+                i, _, _, active, *_ = carry
+                # exit as soon as ANY slot drains (not just all): a spec
+                # slot's finish step is data-dependent (acceptance), so
+                # running the block to n strands the freed slot idle
+                # until the block boundary — exiting returns control to
+                # the scheduler, which refills and redispatches. The
+                # sequential scan never needs this: its block length
+                # min(budgets) already ends exactly at first retirement.
+                return (i < n) & jnp.all(active == active0)
+
+            def body(carry):
+                (i, caches, tok, active, budget, key, hist, hcnt,
+                 toks_buf, emit_buf) = carry
+                drafts = drafter.propose(hist, hcnt, k)
+                x = jnp.concatenate([tok[:, None], drafts], axis=1)
+                logits, caches = Mod.decode_step(
+                    params, cfg, {"tokens": x}, caches, impl=impl,
+                    act_sharding=act, lookahead=k)
+                key, sub = jax.random.split(key)
+                # one batched sample over the T verify positions (vmap is
+                # bitwise the per-j loop: same fold_in(sub, j) keys, same
+                # row math) — unrolling T sample chains costs as much as
+                # the whole forward on small models
+                subs = jax.vmap(
+                    lambda j: jax.random.fold_in(sub, j))(jnp.arange(t))
+                ver = jax.vmap(
+                    lambda kj, lj: sampling.sample(kj, lj, temps, top_k),
+                    in_axes=(0, 1), out_axes=1)(subs, logits)  # (B, T)
+                match = (drafts == ver[:, :k]).astype(jnp.int32)
+                acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+                e = jnp.where(active, jnp.minimum(acc + 1, budget), 0)
+                caches = jax.tree.map(
+                    lambda c: ({**c, "step": c["step"] - t
+                                + e[None, :].astype(c["step"].dtype)}
+                               if isinstance(c, dict) and "step" in c else c),
+                    caches, is_leaf=lambda c: isinstance(c, dict)
+                    and "step" in c)
+                newlast = jnp.take_along_axis(
+                    ver, jnp.maximum(e - 1, 0)[:, None], axis=1)[:, 0]
+                tok = jnp.where(active, newlast, tok)
+                hist, hcnt = drafter.observe(hist, hcnt, ver, e)
+                emitted = jnp.arange(t, dtype=jnp.int32)[None, :] < e[:, None]
+                budget = budget - e
+                active = active & (budget > 0)
+                return (i + 1, caches, tok, active, budget, key, hist, hcnt,
+                        toks_buf.at[i].set(ver), emit_buf.at[i].set(emitted))
+
+            (steps, caches, tok, active, budget, key, hist, hcnt,
+             toks, emit) = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), caches, tok, active, budget, key,
+                             hist, hcnt, toks0, emit0))
+            return (caches, tok, active, budget, key, hist, hcnt, toks,
+                    emit, steps)
+
+        if self.mesh is None:
+            return jax.jit(fn)
+        cache_sh = self.cache_sharding(slots)
+        veci = self.batch_sharding(self._sds((slots,)), slots)
+        vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
+        vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
+        hist_sh = self.batch_sharding(
+            self._sds((slots, drafter.history)), slots)
+        blk = self.batch_sharding(
+            self._sds((n, slots, t)), slots, slot_dim=1)
+        return jax.jit(
+            fn,
+            in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
+                          vecf, self._rep, hist_sh, veci),
+            out_shardings=(cache_sh, veci, vecb, veci, self._rep, hist_sh,
+                           veci, blk, blk, self._rep))
+
 
 @functools.lru_cache(maxsize=16)
 def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
                   top_k: int, mesh=None, profile: str = "tp",
-                  tokens_per_step: int = 1) -> _Compiled:
+                  tokens_per_step: int = 1, speculative: int = 0,
+                  draft: Optional[NGramDrafter] = None) -> _Compiled:
     return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
-                     tokens_per_step)
+                     tokens_per_step, speculative, draft)
 
 
 class ServingEngine:
@@ -304,7 +435,8 @@ class ServingEngine:
                  batch_prefill: bool = True, prefill_chunk: int = 0,
                  max_prefill_tokens: int = 8192, pad_to: int = 16,
                  top_k: int = 0, decode_impl: str = "ref",
-                 mesh=None, profile: str = "tp", tokens_per_step: int = 1):
+                 mesh=None, profile: str = "tp", tokens_per_step: int = 1,
+                 speculative: int = 0, draft: Optional[NGramDrafter] = None):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
@@ -312,10 +444,20 @@ class ServingEngine:
 
         tokens_per_step: ring lookahead for multi-token decode steps — the
         caches carry T-1 extra ring rows and every compiled entry point is
-        keyed by it, so a future speculative-decode step can verify T draft
+        keyed by it, so a speculative-decode step can verify T draft
         tokens per dispatch on these caches. Generated tokens are unchanged
-        (the positional window mask hides the extra ring depth); the decode
-        loop itself still emits one token per scan step.
+        (the positional window mask hides the extra ring depth).
+
+        speculative: draft tokens per decode step (0 = sequential decode).
+        Each step proposes `speculative` tokens with `draft` (default:
+        NGramDrafter self-drafting), verifies them all in one decode_step
+        dispatch, and emits the longest verified prefix plus the model's
+        own next token — 1..speculative+1 tokens per step per slot. Greedy
+        requests produce bitwise the sequential engine's tokens (the
+        tests/test_speculative.py contract); acceptance telemetry
+        accumulates in `self.stats` / `self.acceptance_rate`. Forces
+        tokens_per_step up to speculative+1 so the ring carries the
+        lookahead rows the rollback guarantee needs.
 
         mesh: optional jax.sharding.Mesh — params are placed once at
         construction (`param_sharding(profile)`), caches/decode state carry
@@ -332,11 +474,21 @@ class ServingEngine:
                               if Mod.prefill_chunkable(cfg) else 0)
         self.top_k = top_k
         self.decode_impl = decode_impl
-        self.tokens_per_step = max(1, tokens_per_step)
+        self.speculative = max(0, speculative)
+        if self.speculative:
+            assert Mod.speculative_supported(cfg), (
+                "speculative decode needs rotary positions and "
+                "attention-only layers (no mamba/encoder-decoder state to "
+                "roll back); config %s does not qualify" % (cfg.name,))
+        self.tokens_per_step = max(1, tokens_per_step, self.speculative + 1)
         self.mesh, self.profile = mesh, profile
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
-                                profile, self.tokens_per_step)
+                                profile, self.tokens_per_step,
+                                self.speculative,
+                                get_drafter(draft) if self.speculative
+                                else None)
+        self.drafter = self._c.drafter
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
         self.scheduler = Scheduler(
@@ -350,7 +502,25 @@ class ServingEngine:
         self.slot_last = np.zeros((batch_slots,), np.int32)
         self.slot_budget = np.zeros((batch_slots,), np.int32)
         self.slot_temp = np.zeros((batch_slots,), np.float32)
+        if self.speculative:
+            self.slot_hist, self.slot_hcnt = \
+                self.drafter.init_state(batch_slots)
+        # device-staged copies of the per-slot decode vectors; None means
+        # "stale, rebuild from the host mirrors" (set by every admission)
+        self._dev: Optional[Dict[str, Any]] = None
         self._completed: List[Result] = []
+        # decode telemetry (accumulated across run()/step() calls):
+        # spec_steps counts executed verify dispatches, draft_proposed /
+        # draft_accepted count drafts offered vs kept (acceptance_rate),
+        # tokens_emitted counts every token produced by decode steps.
+        self.stats = {"spec_steps": 0, "draft_proposed": 0,
+                      "draft_accepted": 0, "tokens_emitted": 0}
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the verifier kept."""
+        p = self.stats["draft_proposed"]
+        return self.stats["draft_accepted"] / p if p else 0.0
 
     # ------------------------------------------------------------ prefill --
     def _prefill_into(self, plan: PrefillPlan, slots: List[int]):
@@ -377,6 +547,18 @@ class ServingEngine:
             self.slot_out[s] = [int(first[i])]
             self.slot_last[s] = int(first[i])
             self.slot_temp[s] = req.temperature
+            if self.speculative:
+                # drafter context = the prompt plus the first sampled
+                # token (hist must end at slot_last — propose() matches
+                # the suffix that includes the pending token). slot_hist
+                # may be device-resident after a decode block; pull it
+                # back to numpy to write the seeded row.
+                self.slot_hist = np.array(self.slot_hist, np.int32)
+                self.slot_hcnt = np.array(self.slot_hcnt, np.int32)
+                row, cnt = self.drafter.seed_row(
+                    np.concatenate([req.prompt, [first[i]]]))
+                self.slot_hist[s] = row
+                self.slot_hcnt[s] = cnt
             budget = req.max_new_tokens - 1
             if budget <= 0:
                 self._completed.append(Result(req.rid, self.slot_out[s]))
@@ -387,6 +569,7 @@ class ServingEngine:
                 self.slot_free[s] = False
                 self.slot_req[s] = req
                 self.slot_budget[s] = budget
+        self._dev = None          # host mirrors changed; restage on device
 
     def _admit(self, pending: Deque[Request]):
         while pending:
@@ -402,22 +585,61 @@ class ServingEngine:
     # ------------------------------------------------------------- decode --
     def _decode_block(self, n: int) -> List[Result]:
         """Run n decode steps on-device (one host sync), then retire
-        finished slots."""
+        finished slots. Speculative engines run n draft/verify/accept
+        steps instead, each emitting 1..speculative+1 tokens per slot."""
         live = [s for s in range(self.slots) if not self.slot_free[s]]
         if not live:
             return []
-        active = np.asarray([not f for f in self.slot_free], bool)
-        (self.caches, tok, _, budget, self.key, toks, emit) = \
-            self._c.scan(n, self.slots)(
-                self.params, self.caches, jnp.asarray(self.slot_last),
-                jnp.asarray(active), jnp.asarray(self.slot_budget),
-                jnp.asarray(self.slot_temp), self.key)
-        toks, emit = np.asarray(toks), np.asarray(emit)
+        if self._dev is None:
+            # (re)stage the per-slot vectors on device. Admission is the
+            # only writer outside a decode block, so between consecutive
+            # blocks the scan's own outputs are reused verbatim and a
+            # block dispatch uploads NOTHING — host->device staging of
+            # half a dozen tiny arrays costs as much as a decode step on
+            # small models.
+            active = np.asarray([not f for f in self.slot_free], bool)
+            self._dev = dict(
+                tok=jnp.asarray(self.slot_last),
+                active=jnp.asarray(active),
+                budget=jnp.asarray(self.slot_budget),
+                temps=jnp.asarray(self.slot_temp))
+            if self.speculative:
+                self._dev["hist"] = jnp.asarray(self.slot_hist)
+                self._dev["hcnt"] = jnp.asarray(self.slot_hcnt)
+        dev = self._dev
+        if self.speculative:
+            (self.caches, tok, active_out, budget, self.key, hist, hcnt,
+             toks, emit, steps) = self._c.spec_scan(n, self.slots)(
+                self.params, self.caches, dev["tok"], dev["active"],
+                dev["budget"], dev["temps"], self.key, dev["hist"],
+                dev["hcnt"])
+            # drafter state stays device-resident too; _prefill_into
+            # materializes to numpy only when it needs to seed a row
+            self.slot_hist = hist
+            self.slot_hcnt = hcnt
+            dev.update(tok=tok, active=active_out, budget=budget,
+                       hist=hist, hcnt=hcnt)
+            toks, emit = np.asarray(toks), np.asarray(emit)
+            counts = emit.sum(axis=-1)                        # (n, slots)
+            ran = counts >= 1
+            self.stats["spec_steps"] += int(steps)
+            self.stats["draft_proposed"] += self.speculative * int(ran.sum())
+            self.stats["draft_accepted"] += int((counts[ran] - 1).sum())
+        else:
+            (self.caches, tok, active_out, budget, self.key, toks, emit) = \
+                self._c.scan(n, self.slots)(
+                    self.params, self.caches, dev["tok"], dev["active"],
+                    dev["budget"], dev["temps"], self.key)
+            dev.update(tok=tok, active=active_out, budget=budget)
+            toks, emit = np.asarray(toks), np.asarray(emit)
+        self.stats["tokens_emitted"] += int(emit.sum())
         self.slot_last = np.array(tok, np.int32)      # writable host mirrors
         self.slot_budget = np.array(budget, np.int32)
         done: List[Result] = []
         for s in live:
-            self.slot_out[s].extend(int(t) for t in toks[emit[:, s], s])
+            # row-major over (step[, position]) => chronological order
+            self.slot_out[s].extend(
+                int(t) for t in toks[:, s][emit[:, s]])
             if self.slot_budget[s] <= 0:
                 done.append(Result(self.slot_req[s].rid, self.slot_out[s]))
                 self.slot_free[s] = True
@@ -443,7 +665,17 @@ class ServingEngine:
                         if not self.slot_free[s]]
         if not live_budgets:
             return 0
-        return max(1, min(self.scan_steps, min(live_budgets)))
+        floor = min(live_budgets)
+        # Speculative blocks use the SAME floor: a spec step emits 1..T
+        # tokens, so b steps always suffice and the per-slot budget clamp
+        # plus the all-done early exit make any block length safe. Sizing
+        # by ceil(b/T) instead (the fastest possible finish) assumes full
+        # acceptance and collapses near-drain blocks to n=1 — a host
+        # round trip per step, which is exactly the seed-engine overhead
+        # batching exists to kill. A slot that finishes mid-block idles
+        # until the block ends (refill latency <= scan_steps, the same
+        # bound the sequential engine has).
+        return max(1, min(self.scan_steps, floor))
 
     # --------------------------------------------------------------- run ---
     def run(self, requests: List[Request]) -> List[Result]:

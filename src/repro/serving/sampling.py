@@ -20,13 +20,27 @@ def sample(key, logits, temperatures, top_k: int = 0):
 
     The categorical draw consumes the same randomness whatever the active
     mask or temperatures are, so a scan-decode loop and a stepwise loop that
-    split keys identically produce identical tokens."""
+    split keys identically produce identical tokens.
+
+    All-greedy batches take a runtime `lax.cond` fast path: one argmax and
+    none of the top-k / gumbel ops. Greedy rows argmax the RAW logits (the
+    same value the slow path's final `where` picks), so the branch is
+    bitwise-invisible — it exists because on small models the sampling op
+    chain costs as much as the forward pass it follows, and the speculative
+    verify runs it at every one of T positions."""
     logits = logits.astype(jnp.float32)
     temperatures = jnp.asarray(temperatures, jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if top_k and top_k < logits.shape[-1]:
-        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    scaled = logits / jnp.maximum(temperatures[:, None], 1e-6)
-    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
-    return jnp.where(temperatures > 0, drawn, greedy)
+
+    def greedy_only(lg):
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def full(lg):
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        if top_k and top_k < lg.shape[-1]:
+            kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        scaled = lg / jnp.maximum(temperatures[:, None], 1e-6)
+        drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        return jnp.where(temperatures > 0, drawn, greedy)
+
+    return jax.lax.cond(jnp.any(temperatures > 0), full, greedy_only, logits)

@@ -404,3 +404,115 @@ def test_ring_cache_linear_memory():
 def test_mamba_state_is_constant_memory():
     cfg = get_config("mamba2_1p3b")
     assert ring_cache_bytes(cfg, 1, 16384) == ring_cache_bytes(cfg, 1, 524288)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / engine edge cases (ISSUE-6 hardening sweep)
+# ---------------------------------------------------------------------------
+
+def test_prompt_exactly_max_len_minus_budget(swat_setup):
+    """Prompt length + budget lands EXACTLY on max_len: the last decode
+    step inserts at ring position max_len-1 (the final legal row). Tokens
+    must match the reference — no off-by-one truncation, clamp, or wrap
+    at the boundary."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(14)
+    max_len, budget = 32, 8
+    prompt = rng.randint(0, cfg.vocab_size,
+                         (max_len - budget,)).astype(np.int32)
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=max_len)
+    got = eng.run([Request(rid=0, prompt=prompt,
+                           max_new_tokens=budget)])[0].tokens
+    assert len(got) == budget
+    assert got == greedy_reference(cfg, params, prompt, budget,
+                                   max_len=max_len)
+
+
+def test_all_slots_done_mid_block(swat_setup):
+    """A decode block longer than every live budget: slots go inactive
+    mid-scan, the dead steps' emissions are masked, budgets never go
+    negative, and the tokens are exactly the budget-sized prefix of the
+    normal run. (run() sizes blocks to stop at the earliest completion;
+    calling _decode_block directly is the only way to force the
+    all-done-mid-block path the scan's `active` flags guard.)"""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(15)
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (12, 19)]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=128,
+                        scan_steps=8, seed=21)
+    eng._admit(collections.deque(
+        Request(rid=i, prompt=p, max_new_tokens=3)
+        for i, p in enumerate(prompts)))
+    done = eng._decode_block(8)          # 8 steps vs budgets of 3
+    got = {r.rid: r.tokens for r in done}
+    assert sorted(got) == [0, 1]
+    assert all(b == 0 for b in eng.slot_budget[:2])
+    for i, p in enumerate(prompts):
+        assert got[i] == greedy_reference(cfg, params, p, 3, max_len=128)
+    assert eng.step() == []              # drained: empty result, no crash
+    assert eng._decode_block(4) == []
+
+
+def test_single_pending_request_admits_under_quantum():
+    """slot_quantum > pending: one lone request must still admit (the
+    sub-quantum final-batch rule) — immediately, not after waiting for a
+    full quantum that will never arrive."""
+    sched = Scheduler(max_prefill_tokens=8192, pad_to=16, slot_quantum=4)
+    pending = collections.deque(
+        [Request(rid=0, prompt=np.zeros((8,), np.int32))])
+    plan = sched.plan(pending, num_free=4)
+    assert plan is not None and [r.rid for r in plan.requests] == [0]
+    assert not pending
+    assert sched.plan(pending, num_free=4) is None   # drained queue
+
+
+def test_step_after_drain_is_empty(swat_setup):
+    """step() on a fully drained engine: empty result, no state change,
+    repeatable — the serving loop's idle path."""
+    cfg, params = swat_setup
+    rng = np.random.RandomState(16)
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64)
+    res = eng.run([Request(
+        rid=0, prompt=rng.randint(0, cfg.vocab_size, (9,)).astype(np.int32),
+        max_new_tokens=4)])
+    assert len(res) == 1 and len(res[0].tokens) == 4
+    assert all(eng.slot_free)
+    budgets = eng.slot_budget.copy()
+    for _ in range(3):
+        assert eng.step() == []
+    assert (eng.slot_budget == budgets).all()
+
+
+def test_sample_determinism_across_batch_and_topk():
+    """sampling.sample across batch sizes x top_k (the ISSUE-6 fix test):
+    temperature<=0 rows are bitwise the raw-logits argmax at EVERY top_k
+    (top-k truncation must not touch the greedy path), one slot's
+    temperature never perturbs any other slot at any top_k (the draw's
+    randomness is shape-dependent only), and a fixed key reproduces."""
+    from repro.serving import sampling
+    rng = np.random.RandomState(17)
+    v = 64
+    for b in (1, 2, 5, 8):
+        logits = jnp.asarray(rng.randn(b, v), jnp.float32)
+        want_greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        key = jax.random.PRNGKey(31 + b)
+        for top_k in (0, 1, 4, v, v + 9):
+            cold = np.asarray(sampling.sample(
+                key, logits, jnp.zeros((b,)), top_k=top_k))
+            assert (cold == want_greedy).all(), (b, top_k)
+            again = np.asarray(sampling.sample(
+                key, logits, jnp.zeros((b,)), top_k=top_k))
+            assert (cold == again).all(), (b, top_k)
+            for j in range(b):           # heat ONE slot at a time
+                temps = np.zeros((b,), np.float32)
+                temps[j] = 3.0
+                hot = np.asarray(sampling.sample(
+                    key, logits, jnp.asarray(temps), top_k=top_k))
+                others = np.arange(b) != j
+                assert (hot[others] == cold[others]).all(), (b, top_k, j)
+            # top_k=1 sampling degenerates to greedy even when hot
+            if top_k == 1:
+                hot_all = np.asarray(sampling.sample(
+                    key, logits, jnp.full((b,), 2.0), top_k=1))
+                assert (hot_all == want_greedy).all(), b

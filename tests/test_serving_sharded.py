@@ -130,3 +130,23 @@ def test_sharded_chunked_prefill_matches():
     assert single == chunked, (single, chunked)
     print("ok sharded chunked prefill")
     """)
+
+
+def test_speculative_slot_parallel_identical():
+    """Speculative decode on a 4-device slot-parallel mesh: bitwise the
+    unsharded speculative engine on EVERY row (draft/verify/accept and
+    the n-gram history are all slot-local math), and the greedy rows are
+    bitwise the unsharded SEQUENTIAL engine — the ISSUE-6 acceptance bar.
+    The drafter history state must actually ride the slot axis, not
+    silently replicate."""
+    run_sub(COMMON + """
+    _, seq = run(None)
+    _, spec = run(None, speculative=3)
+    eng, shard = run(mesh_lib.make_debug_mesh(4, 1), speculative=3)
+    assert spec == shard, (spec, shard)
+    for i in (0, 2, 5):                      # the greedy rows
+        assert shard[i] == seq[i], (i, shard[i], seq[i])
+    assert eng.stats["draft_proposed"] > 0
+    print("ok sharded speculative identical; acceptance",
+          round(eng.acceptance_rate, 3))
+    """)

@@ -1,0 +1,284 @@
+"""Speculative decoding: greedy output must be BITWISE sequential decode.
+
+The engine's draft/verify/accept loop emits 1..k+1 tokens per step, but
+every emitted token is the model's own output for a fully verified prefix
+— so for greedy requests the speculative engine is token-for-token the
+`speculative=0` sequential engine, on every attention-bearing config
+(dense, SWAT window+global, gemma2's local/global alternation, GQA), on
+both decode impls, and at every scan_steps. That identity is THE
+acceptance bar for shipping speculation; everything else here (rollback
+state, drafter behavior, telemetry arithmetic, budget clamping) guards
+the machinery that makes it hold.
+
+The sharded counterpart (4-device slot-parallel mesh, subprocess) lives
+in tests/test_serving_sharded.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, with_swat
+from repro.core import model as Mod
+from repro.core.layers import cache_capacity
+from repro.serving.drafter import NGramDrafter, get_drafter
+from repro.serving.engine import Request, ServingEngine
+
+
+def _build(name, swat=False):
+    cfg = get_smoke_config(name)
+    if swat:
+        cfg = with_swat(cfg, window=16, num_global=4)
+    return cfg, Mod.init_model(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def models():
+    """Every attention-bearing smoke family the engine serves:
+    llama+swat (window+global ring, GQA: 4 q heads on 1 kv head),
+    gemma2 (local/global alternation + logit softcap), llama dense."""
+    return {
+        "llama_swat": _build("llama3p2_1b", swat=True),
+        "gemma2": _build("gemma2_2b"),
+        "llama_dense": _build("llama3p2_1b"),
+    }
+
+
+def _requests(cfg, rng, temps=None):
+    lens = (12, 30, 7, 18, 25, 10)
+    budgets = (6, 19, 1, 27, 5, 2)       # incl. prefill-only and clamp-y
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in lens]
+    temps = temps or [0.0] * len(lens)
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i],
+                    temperature=temps[i]) for i in range(len(lens))]
+
+
+def _run(cfg, params, reqs, **kw):
+    kw.setdefault("batch_slots", 4)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("scan_steps", 4)
+    kw.setdefault("seed", 11)
+    eng = ServingEngine(cfg, params, **kw)
+    return eng, {r.rid: r.tokens for r in eng.run(reqs)}
+
+
+# ------------------------------------------------------------- identity --
+@pytest.mark.parametrize("name", ["llama_swat", "gemma2", "llama_dense"])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_greedy_identity(models, name, impl):
+    """Greedy speculative == sequential, bitwise, per config x impl —
+    mixed prompt lengths, slot eviction/refill (6 reqs on 4 slots), and
+    budgets that exercise the per-slot clamp (1 and 2 left after
+    prefill's token with k=3 drafts in flight)."""
+    cfg, params = models[name]
+    rng = np.random.RandomState(3)
+    reqs = _requests(cfg, rng)
+    _, base = _run(cfg, params, reqs, decode_impl=impl)
+    eng, spec = _run(cfg, params, reqs, decode_impl=impl, speculative=3)
+    assert base == spec, (name, impl, base, spec)
+    # telemetry arithmetic: decode emitted everything but prefill's token
+    total = sum(len(t) for t in spec.values())
+    assert eng.stats["tokens_emitted"] == total - len(reqs)
+    assert 0 <= eng.stats["draft_accepted"] <= eng.stats["draft_proposed"]
+
+
+def test_identity_across_scan_steps_and_k(models):
+    """The block size and the draft depth are performance knobs only:
+    greedy tokens are invariant across scan_steps x speculative."""
+    cfg, params = models["llama_swat"]
+    rng = np.random.RandomState(5)
+    reqs = _requests(cfg, rng)
+    _, want = _run(cfg, params, reqs)
+    for steps in (1, 4, 8):
+        for k in (1, 2, 5):
+            _, got = _run(cfg, params, reqs, scan_steps=steps, speculative=k)
+            assert got == want, (steps, k, got, want)
+
+
+def test_greedy_rows_exact_under_mixed_temperatures(models):
+    """Sampled slots share the batch with greedy slots: the greedy rows
+    must still be bitwise sequential (verification is row-local), sampled
+    rows serve to exact budget, and the speculative engine is
+    bit-reproducible run-to-run (same seed => same tokens)."""
+    cfg, params = models["gemma2"]
+    rng = np.random.RandomState(7)
+    temps = [0.0, 1.5, 0.0, 2.5, 1.0, 0.0]
+    reqs = _requests(cfg, rng, temps=temps)
+    _, base = _run(cfg, params, reqs)
+    _, spec = _run(cfg, params, reqs, speculative=3)
+    for i, t in enumerate(temps):
+        assert len(spec[i]) == len(base[i])
+        if t == 0.0:
+            assert spec[i] == base[i], (i, spec[i], base[i])
+    _, again = _run(cfg, params, reqs, speculative=3)
+    assert spec == again
+
+
+def test_greedy_identity_with_top_k(models):
+    """Engine-level top_k truncates the SAMPLING path only; greedy rows
+    argmax the raw logits, so speculative identity must survive top_k."""
+    cfg, params = models["llama_swat"]
+    rng = np.random.RandomState(9)
+    reqs = _requests(cfg, rng)
+    _, base = _run(cfg, params, reqs, top_k=4)
+    _, spec = _run(cfg, params, reqs, top_k=4, speculative=3)
+    assert base == spec
+
+
+def test_step_api_speculative(models):
+    """`step()` (the per-block serving entry point) works speculatively:
+    each call emits >= 1 token per live slot, budgets never overshoot."""
+    cfg, params = models["llama_swat"]
+    rng = np.random.RandomState(13)
+    reqs = _requests(cfg, rng)[:4]
+    eng = ServingEngine(cfg, params, batch_slots=4, max_len=128,
+                        speculative=3, seed=11)
+    eng._admit(__import__("collections").deque(reqs))
+    done = list(eng._completed)
+    while not all(eng.slot_free):
+        done.extend(eng.step())
+        assert all(b >= 0 for b in eng.slot_budget)
+    got = {r.rid: r.tokens for r in done}
+    _, want = _run(cfg, params, reqs)
+    assert got == want
+    assert eng.step() == []          # drained engine: empty, no crash
+
+
+# ------------------------------------------------------------- rollback --
+def test_rollback_restores_sequential_ring_state(models):
+    """The spec engine's ring write pointers obey the sequential-state
+    invariant: a slot that consumed its prompt (L) and emitted k tokens
+    holds step == L + k - 1 (the newest token is pending, not yet fed).
+    The rollback must subtract exactly the rejected rows every step,
+    ragged per slot, in every layer, for this to hold at the end — and
+    inactive slots must restore their pointer exactly (e=0 -> step
+    unchanged), which is why retired slots stay on the formula too.
+    (The sequential engine itself does NOT satisfy this at run end: it
+    keeps advancing retired slots' dead pointers inside a block. Only
+    live-slot state is ever read, so only the formula matters.)"""
+    cfg, params = models["llama_swat"]
+    rng = np.random.RandomState(17)
+    lens = (12, 30, 7, 18)
+    prompts = [rng.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in lens]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=b)
+            for i, (p, b) in enumerate(zip(prompts, (6, 19, 4, 27)))]
+    # 4 requests on 4 slots: request i lives (and dies) in slot i
+    eng, out = _run(cfg, params, reqs, speculative=3)
+    for lname, c in eng.caches.items():
+        step = np.asarray(c["step"])            # (super_blocks, slots)
+        for s in range(4):
+            want = lens[s] + len(out[s]) - 1
+            assert (step[:, s] == want).all(), (lname, s, step[:, s], want)
+
+
+def test_unsupported_config_is_rejected():
+    """speculative= on a rollback-unsafe config (mamba state) must fail
+    loudly at construction, not corrupt state at decode time."""
+    import dataclasses
+    cfg = get_smoke_config("llama3p2_1b")
+    mamba_like = dataclasses.replace(cfg, layer_pattern=("mamba",))
+    assert not Mod.speculative_supported(mamba_like)
+    with pytest.raises(AssertionError):
+        ServingEngine(mamba_like, None, speculative=2)
+
+
+def test_lookahead_rows_sized_for_drafts(models):
+    """speculative=k forces tokens_per_step to k+1, which sizes the ring
+    with k lookahead rows — the no-eviction guarantee the rollback proof
+    leans on (cache_capacity = window + 1 + lookahead + globals)."""
+    cfg, params = models["llama_swat"]
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=128,
+                        speculative=3)
+    assert eng.tokens_per_step == 4
+    acfg = Mod.attn_cfg(cfg, "attn")
+    cap = cache_capacity(acfg, 128, lookahead=3)
+    assert cap == acfg.spec.window + 1 + 3 + acfg.spec.num_global
+
+
+# -------------------------------------------------------------- drafter --
+def test_drafter_propose_finds_repeats():
+    """propose() returns the continuation of the most recent longest
+    suffix match; slots with no match repeat their last token."""
+    d = NGramDrafter(max_ngram=3, history=16)
+    hist, cnt = d.init_state(2)
+    # slot 0: ... 5 6 7 8 5 6  -> context suffix (5, 6) matched at the
+    # earlier occurrence, continuation 7 8 ...
+    seq = [1, 2, 5, 6, 7, 8, 5, 6]
+    hist[0], cnt[0] = d.seed_row(np.array(seq))
+    # slot 1: no repeats at all
+    hist[1], cnt[1] = d.seed_row(np.array([3, 9, 4, 11]))
+    out = np.asarray(d.propose(jnp.asarray(hist), jnp.asarray(cnt), 3))
+    assert out[0].tolist() == [7, 8, 5]
+    assert out[1].tolist() == [11, 11, 11]
+
+
+def test_drafter_prefers_recent_and_longer_matches():
+    d = NGramDrafter(max_ngram=3, history=32)
+    hist, cnt = d.init_state(2)
+    # slot 0: suffix (2, 3) occurs twice — recency picks the LATER one
+    hist[0], cnt[0] = d.seed_row(np.array([2, 3, 7, 7, 2, 3, 9, 9, 2, 3]))
+    # slot 1: 1-gram match everywhere, but a full 3-gram match exists
+    # earlier — length beats recency
+    hist[1], cnt[1] = d.seed_row(np.array([5, 6, 7, 8, 1, 7, 2, 5, 6, 7]))
+    out = np.asarray(d.propose(jnp.asarray(hist), jnp.asarray(cnt), 2))
+    assert out[0].tolist() == [9, 9]
+    assert out[1].tolist() == [8, 1]
+
+
+def test_drafter_observe_matches_numpy_oracle():
+    """observe() == append-then-keep-last-H, ragged per slot, including
+    e=0 (untouched) and overflow past the history length."""
+    d = NGramDrafter(history=8)
+    rng = np.random.RandomState(23)
+    hist = rng.randint(0, 50, (4, 8)).astype(np.int32)
+    cnt = np.array([8, 3, 0, 6], np.int32)
+    toks = rng.randint(0, 50, (4, 5)).astype(np.int32)
+    e = np.array([5, 2, 0, 3], np.int32)
+    nh, nc = d.observe(jnp.asarray(hist), jnp.asarray(cnt),
+                       jnp.asarray(toks), jnp.asarray(e))
+    nh, nc = np.asarray(nh), np.asarray(nc)
+    for b in range(4):
+        want = np.concatenate([hist[b], toks[b, :e[b]]])[-8:]
+        assert nh[b].tolist() == want.tolist(), b
+        assert nc[b] == min(cnt[b] + e[b], 8)
+
+
+def test_drafter_seed_row_truncates_to_history():
+    d = NGramDrafter(history=6)
+    row, cnt = d.seed_row(np.arange(10))
+    assert cnt == 6 and row.tolist() == [4, 5, 6, 7, 8, 9]
+    row, cnt = d.seed_row(np.array([3, 1]))
+    assert cnt == 2 and row.tolist() == [0, 0, 0, 0, 3, 1]
+
+
+def test_drafter_is_compile_key():
+    """Drafter specs are frozen/hashable and distinct specs are distinct
+    engine compile keys (get_drafter normalizes None to the default)."""
+    assert get_drafter(None) == NGramDrafter()
+    assert hash(NGramDrafter(2, 32)) != hash(NGramDrafter(3, 32)) or \
+        NGramDrafter(2, 32) != NGramDrafter(3, 32)
+    with pytest.raises(AssertionError):
+        get_drafter("not a drafter")
+
+
+# ------------------------------------------------------------ telemetry --
+def test_acceptance_rate_on_self_similar_output(models):
+    """A drafter that proposes from the model's own history should land a
+    healthy acceptance rate once greedy decode settles into its
+    attractor — the mechanism the serve-bench speedup relies on. The
+    bound is deliberately loose (it guards 'speculation does something',
+    not a specific rate)."""
+    cfg, params = models["gemma2"]
+    rng = np.random.RandomState(29)
+    prompts = [rng.randint(0, cfg.vocab_size, (12,)).astype(np.int32)
+               for _ in range(4)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=48)
+            for i, p in enumerate(prompts)]
+    eng, _ = _run(cfg, params, reqs, speculative=3, scan_steps=8)
+    assert eng.stats["draft_accepted"] > 0
+    assert eng.acceptance_rate > 0.1, eng.stats
+    # fresh engines start clean
+    assert ServingEngine(cfg, params, batch_slots=2,
+                         speculative=2).acceptance_rate == 0.0
