@@ -232,6 +232,14 @@ def smoke(rng):
     #    shape must be on the tracked list — a NEW loss shape (or a
     #    stale/deleted artifact) fails CI instead of scrolling by.
     check_benchmark_artifact()
+
+    # 5. static-analysis gate: the committed ANALYSIS.json (written by
+    #    `python -m repro.launch.analyze --write`) must exist and report
+    #    zero hot-path violations — a kernel change that un-donates the
+    #    ring caches or leaks a collective into the decode scan refuses
+    #    here even before the full `analyze --check` lane runs
+    from repro.analysis import baselines
+    baselines.check_artifact()
     print("[kernel_bench] smoke OK")
 
 

@@ -1,0 +1,22 @@
+"""swatlint: static analysis of the jitted serving surface.
+
+Traces every `_Compiled` entry point on ShapeDtypeStructs (no real
+compute) and proves the hot-path invariants hold: carries donated and
+aliased, no host callbacks in scan bodies, slot-parallel decode
+collective-free, TP within blessed wire-byte budgets, no bf16->f32
+matmul upcasts, and a pinned lowering count per entry family.
+
+CLI: `python -m repro.launch.analyze` (--check / --write). Committed
+baseline: ANALYSIS.json at the repo root.
+"""
+from repro.analysis.rules import (ERROR, WARN, Finding,  # noqa: F401
+                                  audit_recompiles, check_donation,
+                                  check_dtype_promotion, check_host_sync,
+                                  check_collectives, lowering_counts)
+from repro.analysis.tracer import (EntryPoint, LeafInfo,  # noqa: F401
+                                   TracedEntry, compiled_alias_pairs,
+                                   donated_arg_indices, engine_entry_points,
+                                   trace, walk_jaxpr)
+from repro.analysis.report import (analyze_engine,  # noqa: F401
+                                   analyze_entry_points, merge_reports)
+from repro.analysis import baselines  # noqa: F401

@@ -1,0 +1,136 @@
+"""swatlint orchestration: trace an engine's matrix, run every rule,
+assemble the serializable report that becomes ANALYSIS.json.
+
+Report shape (one dict per analyzed engine, merged by the CLI):
+
+  {"entries":   {name: {family, compile_key, carry_bytes, donated,
+                        alias_pairs, collectives, wire_bytes, ...}},
+   "lowerings": {family: distinct-compile-key count},
+   "budgets":   {family: blessed CollectiveBudget (TP engines only)},
+   "findings":  [Finding...],
+   "summary":   {"errors": n, "warnings": n, "entries": n}}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis import rules as R
+from repro.analysis import tracer as T
+from repro.distributed.hlo_analysis import (CollectiveBudget,
+                                            parse_collectives)
+
+
+def analyze_entry_points(points: Sequence[T.EntryPoint], *,
+                         label: str = "",
+                         compile: bool = True,
+                         min_carry_bytes: int = R.DEFAULT_MIN_CARRY_BYTES,
+                         baseline: Optional[dict] = None,
+                         pad_events: Optional[Sequence[dict]] = None
+                         ) -> Dict[str, Any]:
+    """Trace + lint a set of entry points; returns the per-engine report.
+
+    baseline: this engine's section of a previously committed ANALYSIS.json.
+    When present, TP collective budgets and per-family lowering caps come
+    from it (check mode); when absent, the measured profile is blessed as
+    the new budget (write mode).
+    """
+    base_budgets = (baseline or {}).get("budgets") or {}
+    base_lowerings = (baseline or {}).get("lowerings") or {}
+
+    traced: List[T.TracedEntry] = []
+    findings: List[R.Finding] = []
+    entries: Dict[str, Any] = {}
+    budgets: Dict[str, dict] = {}
+
+    for p in points:
+        tr = T.trace(p, compile=compile)
+        traced.append(tr)
+        findings += R.check_donation(tr, min_bytes=min_carry_bytes)
+        findings += R.check_host_sync(tr)
+        findings += R.check_dtype_promotion(tr)
+
+        stats = (parse_collectives(tr.compiled_hlo)
+                 if tr.compiled_hlo is not None else None)
+        budget = R.budget_for(tr, base_budgets)
+        if budget is not None:
+            findings += R.check_collectives(tr, budget)
+        elif stats is not None:
+            # bless mode: record measured profile (+headroom) as the budget
+            prev = budgets.get(p.family)
+            cand = CollectiveBudget.from_counts(stats.counts,
+                                               stats.wire_bytes)
+            if prev is None or cand.max_wire_bytes > prev["max_wire_bytes"]:
+                merged = dict((prev or {}).get("allow", {}))
+                for k, n in cand.to_dict()["allow"].items():
+                    merged[k] = max(merged.get(k, 0), n)
+                budgets[p.family] = {
+                    "allow": merged,
+                    "max_wire_bytes": max(cand.max_wire_bytes,
+                                          (prev or {}).get(
+                                              "max_wire_bytes", 0.0))}
+
+        carry = set(p.carries)
+        donated_ok = all(l.index in tr.donated for l in tr.in_leaves
+                         if l.argnum in carry) if carry else None
+        entries[p.name] = {
+            "family": p.family,
+            "tags": sorted(p.tags),
+            "compile_key": tr.compile_key,
+            "carry_bytes": tr.carry_bytes,
+            "carries_donated": donated_ok,
+            "alias_pairs": len(tr.alias_pairs),
+            "collectives": stats.counts if stats else {},
+            "wire_bytes": stats.wire_bytes if stats else 0.0,
+        }
+
+    caps = {f: int(n) for f, n in base_lowerings.items()} or None
+    findings += R.audit_recompiles(traced, max_per_family=caps)
+
+    for ev in pad_events or ():
+        findings.append(R.Finding(
+            "pad_fallback", R.WARN, label or "kernels",
+            f"decode_block_kv window {ev.get('w')} pads block_kv "
+            f"{ev.get('block_kv')} -> {ev.get('min_block')} — odd window "
+            "sizes waste KV bandwidth on the hot path",
+            dict(ev)))
+
+    errors = sum(1 for f in findings if f.severity == R.ERROR)
+    warns = sum(1 for f in findings if f.severity == R.WARN)
+    return {
+        "entries": entries,
+        "lowerings": R.lowering_counts(traced),
+        "budgets": budgets or (base_budgets if base_budgets else {}),
+        "findings": [f.to_dict() for f in findings],
+        "summary": {"errors": errors, "warnings": warns,
+                    "entries": len(entries)},
+    }
+
+
+def analyze_engine(engine, *, label: str,
+                   baseline: Optional[dict] = None,
+                   compile: bool = True) -> Dict[str, Any]:
+    """Full swatlint pass over one live ServingEngine."""
+    from repro.kernels import swat_decode
+
+    swat_decode.consume_pad_events()          # drop stale events
+    points = T.engine_entry_points(engine)
+    # Tracing lowers the decode kernels, which re-emits pad events if the
+    # engine config's window does not tile _MIN_BLOCK_KV.
+    report = analyze_entry_points(
+        points, label=label, compile=compile, baseline=baseline,
+        pad_events=swat_decode.consume_pad_events())
+    return report
+
+
+def merge_reports(per_engine: Dict[str, dict], *, meta: dict) -> dict:
+    """Combine per-engine reports into the ANALYSIS.json document."""
+    total_err = sum(r["summary"]["errors"] for r in per_engine.values())
+    total_warn = sum(r["summary"]["warnings"] for r in per_engine.values())
+    total_entries = sum(r["summary"]["entries"] for r in per_engine.values())
+    return {
+        "swatlint": 1,
+        "meta": meta,
+        "engines": per_engine,
+        "summary": {"errors": total_err, "warnings": total_warn,
+                    "entries": total_entries},
+    }

@@ -1,0 +1,281 @@
+"""swatlint rule families over traced entry points.
+
+Five families, each a pure function `TracedEntry -> [Finding]` (plus one
+matrix-level audit over the whole traced set):
+
+  donation          every declared carry leaf donated in StableHLO AND
+                    aliased in the compiled executable; generic catch for
+                    large aliasable inputs nobody declared
+  host_sync         no pure/io/debug callbacks or device_put inside loop
+                    bodies; callbacks anywhere on the decode hot path
+  collectives       per-entry `CollectiveBudget` over the partitioned HLO —
+                    slot-parallel decode must be collective-free
+  dtype_promotion   bf16 values upcast to f32 then fed to matmuls
+  recompile         distinct compile keys per entry family across the
+                    serving matrix + weak-type leaks into compile keys
+
+Severity contract: "error" findings fail `analyze --check` outright;
+"warn" findings fail only when their count grows past the committed
+baseline (see baselines.diff).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.distributed.hlo_analysis import (CollectiveBudget, check_budget,
+                                            parse_collectives)
+from repro.analysis.tracer import TracedEntry, sub_jaxprs, walk_jaxpr
+
+ERROR = "error"
+WARN = "warn"
+
+# Leaves at/above this size trip the generic "large aliasable input is not
+# donated" rule even when no carry was declared. Smoke-scale ring caches are
+# ~256 KiB/leaf (multi-MB at production scale), so 128 KiB keeps the rule
+# live in CI instead of only at scale.
+DEFAULT_MIN_CARRY_BYTES = 128 * 1024
+
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback"}
+_TRANSFER_PRIMS = {"device_put"}
+_LOOP_PRIMS = {"scan", "while"}
+_MATMUL_PRIMS = {"dot_general", "conv_general_dilated"}
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    severity: str
+    entry: str
+    message: str
+    details: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------- donation --
+
+def check_donation(tr: TracedEntry, *,
+                   min_bytes: int = DEFAULT_MIN_CARRY_BYTES
+                   ) -> List[Finding]:
+    out: List[Finding] = []
+    name = tr.point.name
+    aliased_inputs = {i for i, _ in tr.alias_pairs}
+
+    for argnum in tr.point.carries:
+        leaves = tr.arg_leaves(argnum)
+        missing = [l for l in leaves if l.index not in tr.donated]
+        nbytes = sum(l.nbytes for l in leaves)
+        if missing:
+            out.append(Finding(
+                "donation", ERROR, name,
+                f"carry arg {argnum} is not donated: {len(missing)}/"
+                f"{len(leaves)} leaves copied every call (~{nbytes} B)",
+                {"argnum": argnum, "carry_bytes": nbytes,
+                 "undonated_leaves": len(missing)}))
+        elif tr.compiled_hlo is not None:
+            dead = [l for l in leaves if l.index in tr.donated
+                    and l.index not in aliased_inputs
+                    and l.index not in tr.pruned]
+            if dead:
+                out.append(Finding(
+                    "donation", ERROR, name,
+                    f"carry arg {argnum} is donated but {len(dead)} leaves "
+                    "have no input-output alias in the compiled executable "
+                    "— XLA dropped the donation (silent copy)",
+                    {"argnum": argnum,
+                     "unaliased_leaves": [l.index for l in dead]}))
+
+    # Generic catch: a large input whose exact (shape, dtype) also appears
+    # in the outputs and is neither donated nor a declared carry is almost
+    # certainly a forgotten carry. Warn-level: params legitimately flow
+    # through some training entry points.
+    declared = set(tr.point.carries)
+    out_sigs: Dict[tuple, int] = defaultdict(int)
+    for l in tr.out_leaves:
+        out_sigs[(l.shape, l.dtype)] += 1
+    matched: Dict[tuple, int] = defaultdict(int)
+    for l in tr.in_leaves:
+        if l.argnum in declared or l.index in tr.donated:
+            matched[(l.shape, l.dtype)] += 1
+    for l in tr.in_leaves:
+        if l.argnum in declared or l.index in tr.donated:
+            continue
+        if l.nbytes < min_bytes:
+            continue
+        sig = (l.shape, l.dtype)
+        if matched[sig] < out_sigs.get(sig, 0):
+            matched[sig] += 1
+            out.append(Finding(
+                "donation", WARN, name,
+                f"input leaf {l.index} (arg {l.argnum}, {l.dtype}"
+                f"{list(l.shape)}, {l.nbytes} B) matches an output shape "
+                "but is not donated — likely a forgotten carry",
+                {"leaf": l.index, "argnum": l.argnum, "bytes": l.nbytes}))
+    return out
+
+
+# --------------------------------------------------------------- host sync --
+
+def check_host_sync(tr: TracedEntry) -> List[Finding]:
+    out: List[Finding] = []
+    name = tr.point.name
+    hot = "decode_hot_path" in tr.point.tags
+
+    def visit(eqn, ctx):
+        prim = eqn.primitive.name
+        in_loop = any(c in _LOOP_PRIMS for c in ctx)
+        if prim in _CALLBACK_PRIMS:
+            sev = ERROR if (in_loop or hot) else WARN
+            where = f"inside {'/'.join(ctx)}" if ctx else "at top level"
+            out.append(Finding(
+                "host_sync", sev, name,
+                f"host callback `{prim}` {where} — every execution "
+                "synchronizes with Python",
+                {"primitive": prim, "context": list(ctx)}))
+        elif prim in _TRANSFER_PRIMS and in_loop:
+            # device_put with no target device and ALIAS copy semantics is
+            # a no-op placement annotation, not a transfer — skip those
+            devices = eqn.params.get("devices", ())
+            if any(d is not None for d in devices):
+                out.append(Finding(
+                    "host_sync", WARN, name,
+                    f"`{prim}` inside {'/'.join(ctx)} — transfer in a "
+                    "loop body",
+                    {"primitive": prim, "context": list(ctx)}))
+
+    walk_jaxpr(tr.jaxpr, visit)
+    return out
+
+
+# -------------------------------------------------------------- collectives --
+
+def budget_for(tr: TracedEntry,
+               baseline_budgets: Optional[Dict[str, dict]] = None
+               ) -> Optional[CollectiveBudget]:
+    """Resolve the collective budget for one entry point.
+
+    Single-host entries are collective-free by construction and required
+    to stay so. Slot-parallel DECODE entries (the hot path) must also be
+    collective-free — decoding is embarrassingly parallel over slots, so
+    any all-gather/all-reduce there is a sharding leak. Slot-parallel
+    block-boundary entries (admission insert, ragged n=1 prefill) may
+    legitimately reshard, and TP entries legitimately reduce activations:
+    those check against the blessed baseline budget when one exists; with
+    no baseline (bless mode) this returns None and the caller records the
+    measured profile as the new budget.
+    """
+    tags = tr.point.tags
+    if "single" in tags or ("decode_hot_path" in tags and "tp" not in tags):
+        return CollectiveBudget.collective_free()
+    if baseline_budgets:
+        b = baseline_budgets.get(tr.point.family)
+        if b is not None:
+            return CollectiveBudget(
+                allow=tuple(sorted(b.get("allow", {}).items())),
+                max_wire_bytes=float(b.get("max_wire_bytes", 0.0)))
+    return None
+
+
+def check_collectives(tr: TracedEntry,
+                      budget: Optional[CollectiveBudget]) -> List[Finding]:
+    if tr.compiled_hlo is None or budget is None:
+        return []
+    stats = parse_collectives(tr.compiled_hlo)
+    return [
+        Finding("collectives", ERROR, tr.point.name, v,
+                {"counts": stats.counts, "wire_bytes": stats.wire_bytes})
+        for v in check_budget(stats, budget)
+    ]
+
+
+# --------------------------------------------------------- dtype promotion --
+
+def check_dtype_promotion(tr: TracedEntry) -> List[Finding]:
+    """Flag bf16 -> f32 upcasts that feed matmuls.
+
+    Taint is tracked per (sub-)jaxpr: a `convert_element_type` from bf16 to
+    f32 taints its output var; a dot/conv consuming a tainted var means the
+    contraction runs at f32 width in what the author declared a bf16 path —
+    2x the HBM traffic and usually an accident. Intentional f32 accumulation
+    via `preferred_element_type` does NOT trip this (no convert involved).
+    """
+    out: List[Finding] = []
+    name = tr.point.name
+
+    def scan(jaxpr_like):
+        jaxpr = getattr(jaxpr_like, "jaxpr", jaxpr_like)
+        tainted = set()
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            if prim == "convert_element_type":
+                try:
+                    src = str(eqn.invars[0].aval.dtype)
+                    dst = str(eqn.outvars[0].aval.dtype)
+                except Exception:
+                    src = dst = ""
+                if src == "bfloat16" and dst == "float32":
+                    tainted.add(eqn.outvars[0])
+            elif prim in _MATMUL_PRIMS:
+                if any(v in tainted for v in eqn.invars
+                       if hasattr(v, "aval") and not _is_literal(v)):
+                    out.append(Finding(
+                        "dtype_promotion", WARN, name,
+                        f"`{prim}` consumes a bf16->f32 upcast operand — "
+                        "contraction runs at f32 width in a bf16 path",
+                        {"primitive": prim}))
+            for sub in sub_jaxprs(eqn.params):
+                scan(sub)
+
+    scan(tr.jaxpr)
+    return out
+
+
+def _is_literal(v) -> bool:
+    return type(v).__name__ == "Literal"
+
+
+# --------------------------------------------------------- recompile audit --
+
+def audit_recompiles(traced: Sequence[TracedEntry], *,
+                     max_per_family: Optional[Dict[str, int]] = None
+                     ) -> List[Finding]:
+    """Matrix-level audit: weak-type leaks + lowering counts per family.
+
+    Distinct compile keys per family are expected (the batch/steps matrix is
+    deliberate); the committed baseline pins the count and `analyze --check`
+    fails when it grows. Weak types in entry-point signatures are flagged
+    here directly: a weak-typed scalar gives Python-int and jnp.int32 calls
+    DIFFERENT compile keys for identical compute.
+    """
+    out: List[Finding] = []
+    by_family: Dict[str, set] = defaultdict(set)
+    for tr in traced:
+        by_family[tr.point.family].add(tr.compile_key)
+        weak = [l for l in tr.in_leaves if l.weak_type]
+        if weak:
+            out.append(Finding(
+                "recompile", WARN, tr.point.name,
+                f"{len(weak)} weak-typed leaves in the traced signature — "
+                "weak types fork compile keys for identical compute",
+                {"leaves": [l.index for l in weak]}))
+    for family, keys in sorted(by_family.items()):
+        cap = (max_per_family or {}).get(family)
+        if cap is not None and len(keys) > cap:
+            out.append(Finding(
+                "recompile", ERROR, family,
+                f"family `{family}` has {len(keys)} distinct lowerings "
+                f"(baseline allows {cap}) — a shape or dtype leak is "
+                "forking the compile cache",
+                {"lowerings": len(keys), "baseline": cap}))
+    return out
+
+
+def lowering_counts(traced: Sequence[TracedEntry]) -> Dict[str, int]:
+    by_family: Dict[str, set] = defaultdict(set)
+    for tr in traced:
+        by_family[tr.point.family].add(tr.compile_key)
+    return {f: len(k) for f, k in sorted(by_family.items())}

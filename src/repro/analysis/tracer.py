@@ -1,0 +1,385 @@
+"""Abstract tracing of jitted serving entry points (no real compute).
+
+Every invariant swatlint enforces is a property of a PROGRAM, not of a run:
+whether a decode-scan carry is donated, whether a callback hides inside the
+scan body, how many collectives the partitioned module emits. So the tracer
+never materializes an array — each entry point is traced on
+`jax.ShapeDtypeStruct`s through three progressively lower views:
+
+  jaxpr          `fn.trace(*avals).jaxpr` — the rule walkers' input
+                 (host callbacks, dtype promotion, transfers in loop bodies)
+  StableHLO      `fn.lower(*avals).as_text()` — carries the DONATION INTENT
+                 (`tf.aliasing_output` / `jax.buffer_donor` arg attributes)
+  compiled HLO   `lowered.compile().as_text()` — the ground truth: the
+                 executable's `input_output_alias` table (donation that XLA
+                 actually honored) and the post-SPMD collective instructions
+
+The registry half of this module mirrors `serving/engine.py._Compiled`
+exactly: for a live `ServingEngine` it rebuilds the abstract arguments each
+jitted entry point is called with in production, so the analyzer's matrix IS
+the serving matrix, not a parallel approximation that can drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_JAXPR_TYPES: Tuple[type, ...] = ()
+for _mod in ("jax.extend.core", "jax.core"):
+    try:
+        import importlib
+
+        _m = importlib.import_module(_mod)
+        _JAXPR_TYPES += tuple(
+            t for t in (getattr(_m, "Jaxpr", None),
+                        getattr(_m, "ClosedJaxpr", None)) if t is not None)
+    except Exception:  # pragma: no cover - version skew
+        pass
+_JAXPR_TYPES = tuple(dict.fromkeys(_JAXPR_TYPES))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafInfo:
+    """One flattened input/output leaf of an entry point."""
+    index: int                  # flat position across the whole arg list
+    argnum: int                 # which top-level argument it belongs to
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    weak_type: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One jitted serving entry point plus the abstract args it is served
+    with in production.
+
+    carries: argnums whose buffers the engine feeds back next call (ring
+    caches, chunk logits) — the donation rule requires every leaf of these
+    donated AND aliased in the compiled executable.
+    tags: rule routing — "decode_hot_path" entries hold the strictest
+    budgets; "slot_parallel"/"tp"/"single" pick the collective budget.
+    """
+    name: str
+    family: str
+    fn: Any
+    args: Tuple[Any, ...]
+    carries: Tuple[int, ...] = ()
+    tags: frozenset = frozenset()
+
+
+@dataclasses.dataclass
+class TracedEntry:
+    point: EntryPoint
+    jaxpr: Any                        # ClosedJaxpr of the function body
+    stablehlo: str
+    compiled_hlo: Optional[str]
+    in_leaves: List[LeafInfo]
+    out_leaves: List[LeafInfo]
+    donated: Set[int]                 # flat input indices marked donated
+    pruned: Set[int]                  # flat indices dropped by keep_unused
+    alias_pairs: List[Tuple[int, int]]  # (input_param, output_index) pairs
+    compile_key: str
+
+    def arg_leaves(self, argnum: int) -> List[LeafInfo]:
+        return [l for l in self.in_leaves if l.argnum == argnum]
+
+    @property
+    def carry_bytes(self) -> int:
+        carry = set(self.point.carries)
+        return sum(l.nbytes for l in self.in_leaves if l.argnum in carry)
+
+
+# ---------------------------------------------------------------- parsing --
+
+_DONATE_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+_ARG_RE = re.compile(r"%arg(\d+):")
+_TENSOR_RE = re.compile(r"tensor<((?:\d+x)*)([A-Za-z][A-Za-z_0-9]*)>")
+_MLIR_DTYPE = {
+    "f64": "float64", "f32": "float32", "f16": "float16",
+    "bf16": "bfloat16", "i1": "bool", "i8": "int8", "i16": "int16",
+    "i32": "int32", "i64": "int64", "ui8": "uint8", "ui16": "uint16",
+    "ui32": "uint32", "ui64": "uint64",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MainArg:
+    """One @main argument of a lowered StableHLO module."""
+    index: int
+    shape: Tuple[int, ...]
+    dtype: str                  # numpy-style name ("" if unrecognized)
+    donated: bool
+
+
+def stablehlo_main_args(stablehlo: str) -> List[MainArg]:
+    """Parse @main's signature: per-arg shape/dtype + donation marker
+    (`tf.aliasing_output` / `jax.buffer_donor`)."""
+    m = re.search(r"func\.func\s+(?:public\s+)?@main\(", stablehlo)
+    if m is None:
+        return []
+    i, depth = m.end(), 1
+    while i < len(stablehlo) and depth:
+        c = stablehlo[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    sig = stablehlo[m.end():i]
+    args = list(_ARG_RE.finditer(sig))
+    out: List[MainArg] = []
+    for j, am in enumerate(args):
+        end = args[j + 1].start() if j + 1 < len(args) else len(sig)
+        span = sig[am.start():end]
+        tm = _TENSOR_RE.search(span)
+        shape: Tuple[int, ...] = ()
+        dtype = ""
+        if tm:
+            dims = tm.group(1)
+            shape = tuple(int(d) for d in dims.split("x") if d)
+            dtype = _MLIR_DTYPE.get(tm.group(2), "")
+        out.append(MainArg(
+            index=int(am.group(1)), shape=shape, dtype=dtype,
+            donated=any(k in span for k in _DONATE_MARKERS)))
+    return out
+
+
+def align_main_args(in_leaves: List[LeafInfo],
+                    main_args: List[MainArg]) -> Dict[int, int]:
+    """Map StableHLO @main arg index -> flat input leaf index.
+
+    jit lowers with keep_unused=False, so leaves that do not reach an
+    output are PRUNED from the module signature — @main arg numbering is
+    the flat numbering with holes closed up. Both sequences preserve
+    order, so a greedy forward match on (shape, dtype) recovers the map.
+    """
+    out: Dict[int, int] = {}
+    li = 0
+    for a in main_args:
+        while li < len(in_leaves):
+            leaf = in_leaves[li]
+            if leaf.shape == a.shape and (not a.dtype
+                                          or leaf.dtype == a.dtype):
+                out[a.index] = leaf.index
+                li += 1
+                break
+            li += 1
+    return out
+
+
+def donated_arg_indices(stablehlo: str) -> Set[int]:
+    """@main arg indices (module numbering) carrying a donation marker."""
+    return {a.index for a in stablehlo_main_args(stablehlo) if a.donated}
+
+
+def compiled_alias_pairs(hlo_text: str) -> List[Tuple[int, int]]:
+    """(input_param, output_index) pairs from the executable's
+    `input_output_alias={ {out}: (in, {}, may-alias), ... }` header — the
+    proof that XLA kept a donation rather than silently copying."""
+    m = re.search(r"input_output_alias=\{", hlo_text)
+    if m is None:
+        return []
+    i, depth, start = m.end(), 1, m.end()
+    while i < len(hlo_text) and depth:
+        if hlo_text[i] == "{":
+            depth += 1
+        elif hlo_text[i] == "}":
+            depth -= 1
+        i += 1
+    body = hlo_text[start:i - 1]
+    pairs = []
+    for out_idx, in_idx in re.findall(r"\{([\d,\s]*)\}:\s*\((\d+)", body):
+        first = out_idx.split(",")[0].strip()
+        pairs.append((int(in_idx), int(first) if first else 0))
+    return pairs
+
+
+def _leafinfos(tree, argnums: Optional[Sequence[int]] = None
+               ) -> List[LeafInfo]:
+    """Flatten a pytree (or tuple of per-arg pytrees) into LeafInfo rows."""
+    rows: List[LeafInfo] = []
+    if argnums is None:                       # single pytree (outputs)
+        groups = [(0, tree)]
+    else:
+        groups = list(zip(argnums, tree))
+    idx = 0
+    for argnum, sub in groups:
+        for leaf in jax.tree.leaves(sub):
+            dt = jnp.dtype(leaf.dtype)
+            rows.append(LeafInfo(
+                index=idx, argnum=argnum, shape=tuple(leaf.shape),
+                dtype=str(dt), nbytes=int(np.prod(leaf.shape, dtype=np.int64)
+                                          or 1) * dt.itemsize,
+                weak_type=bool(getattr(leaf, "weak_type", False))))
+            idx += 1
+    return rows
+
+
+def _compile_key(family: str, in_leaves: List[LeafInfo]) -> str:
+    sig = tuple((l.shape, l.dtype, l.weak_type) for l in in_leaves)
+    return hashlib.sha1(repr((family, sig)).encode()).hexdigest()[:12]
+
+
+def sub_jaxprs(params: Dict[str, Any]):
+    """Nested jaxprs inside an eqn's params (scan/while/cond/pjit bodies),
+    robust to where a given jax version hides them."""
+    for v in params.values():
+        if isinstance(v, _JAXPR_TYPES):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, _JAXPR_TYPES):
+                    yield x
+
+
+def walk_jaxpr(closed, visit, _ctx: Tuple[str, ...] = ()):
+    """visit(eqn, ctx) over every equation, recursing into sub-jaxprs with
+    the enclosing primitive names as ctx (so rules can ask 'inside scan?')."""
+    jaxpr = getattr(closed, "jaxpr", closed)
+    for eqn in jaxpr.eqns:
+        visit(eqn, _ctx)
+        for sub in sub_jaxprs(eqn.params):
+            walk_jaxpr(sub, visit, _ctx + (eqn.primitive.name,))
+
+
+# ---------------------------------------------------------------- tracing --
+
+def trace(point: EntryPoint, *, compile: bool = True) -> TracedEntry:
+    """Trace + lower (+ compile) one entry point on its abstract args."""
+    fn = point.fn
+    if not hasattr(fn, "lower"):
+        fn = jax.jit(fn)
+    try:
+        jaxpr = fn.trace(*point.args).jaxpr
+    except AttributeError:                     # older jax: no JitWrapped.trace
+        jaxpr = jax.make_jaxpr(fn)(*point.args)
+    lowered = fn.lower(*point.args)
+    stablehlo = lowered.as_text()
+    compiled_hlo = lowered.compile().as_text() if compile else None
+    in_leaves = _leafinfos(point.args, range(len(point.args)))
+    out_leaves = _leafinfos(jax.eval_shape(fn, *point.args))
+    # @main numbering skips pruned (unused) leaves — map donation markers
+    # and compiled alias params back into flat leaf space. A pruned leaf is
+    # never materialized, so "pruned" counts as donated for rule purposes.
+    main_args = stablehlo_main_args(stablehlo)
+    to_flat = align_main_args(in_leaves, main_args)
+    kept_flat = set(to_flat.values())
+    pruned = {l.index for l in in_leaves if l.index not in kept_flat}
+    donated = {to_flat[a.index] for a in main_args
+               if a.donated and a.index in to_flat}
+    donated |= pruned
+    alias_pairs = []
+    if compiled_hlo:
+        alias_pairs = [(to_flat.get(i, i), o)
+                       for i, o in compiled_alias_pairs(compiled_hlo)]
+    return TracedEntry(
+        point=point,
+        jaxpr=jaxpr,
+        stablehlo=stablehlo,
+        compiled_hlo=compiled_hlo,
+        in_leaves=in_leaves,
+        out_leaves=out_leaves,
+        donated=donated,
+        pruned=pruned,
+        alias_pairs=alias_pairs,
+        compile_key=_compile_key(point.family, in_leaves),
+    )
+
+
+# ------------------------------------------------- serving entry registry --
+
+def engine_tags(engine) -> frozenset:
+    if engine.mesh is None:
+        return frozenset({"single"})
+    model = dict(getattr(engine.mesh, "shape", {})).get("model", 1)
+    return frozenset({"tp"} if model > 1 else {"slot_parallel"})
+
+
+def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
+                        scan_lens: Optional[Sequence[int]] = None,
+                        prefill_len: int = 64,
+                        chunk_len: int = 32) -> List[EntryPoint]:
+    """The abstract serving matrix for one engine: every jitted entry point
+    `_Compiled` serves, with the exact argument avals `ServingEngine` feeds
+    it. batch_sizes are prefill-row counts (default: 1 and the full slot
+    count); scan_lens are decode-block lengths (default: 1 and scan_steps).
+    """
+    from repro.core import model as Mod
+
+    c = engine._c
+    cfg = engine.cfg
+    slots = engine.slots
+    base = engine_tags(engine)
+    v = cfg.vocab_size
+    if batch_sizes is None:
+        batch_sizes = sorted({1, slots})
+    if scan_lens is None:
+        scan_lens = sorted({1, engine.scan_steps})
+
+    params_sds = jax.eval_shape(
+        lambda: Mod.init_model(jax.random.PRNGKey(0), cfg))
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    def caches_sds(n):
+        return jax.eval_shape(
+            lambda: Mod.init_caches(cfg, n, engine.max_len,
+                                    lookahead=c.lookahead))
+
+    def sds(shape, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    points: List[EntryPoint] = []
+    for n in batch_sizes:
+        points.append(EntryPoint(
+            name=f"prefill[n={n},len={prefill_len}]", family="prefill",
+            fn=c.prefill(n),
+            args=(params_sds, sds((n, prefill_len)), sds((n,))),
+            tags=base))
+        if Mod.prefill_chunkable(cfg):
+            points.append(EntryPoint(
+                name=f"prefill_chunk[n={n},c={chunk_len}]",
+                family="prefill_chunk", fn=c.chunk(n),
+                args=(params_sds, caches_sds(n), sds((n, chunk_len)),
+                      sds(()), sds((n,)), sds((n, v), jnp.float32)),
+                carries=(1, 5), tags=base))
+        points.append(EntryPoint(
+            name=f"cache_insert[slots={slots},n={n}]", family="cache_insert",
+            fn=c.insert(slots, n),
+            args=(caches_sds(slots), caches_sds(n), sds((n,))),
+            carries=(0,), tags=base))
+        points.append(EntryPoint(
+            name=f"sample[n={n}]", family="sample", fn=c.sample(n),
+            args=(key_sds, sds((n, v), jnp.float32),
+                  sds((n,), jnp.float32)),
+            tags=base))
+
+    hot = base | {"decode_hot_path"}
+    for n in scan_lens:
+        if engine.speculative:
+            drafter = c.drafter
+            points.append(EntryPoint(
+                name=f"spec_scan[n={n},slots={slots}]", family="spec_scan",
+                fn=c.spec_scan(n, slots),
+                args=(params_sds, caches_sds(slots), sds((slots,)),
+                      sds((slots,), jnp.bool_), sds((slots,)),
+                      sds((slots,), jnp.float32), sds((), jnp.bool_),
+                      key_sds, sds((slots, drafter.history)),
+                      sds((slots,))),
+                carries=(1,), tags=hot))
+        else:
+            points.append(EntryPoint(
+                name=f"scan[n={n},slots={slots}]", family="scan",
+                fn=c.scan(n, slots),
+                args=(params_sds, caches_sds(slots), sds((slots,)),
+                      sds((slots,), jnp.bool_), sds((slots,)),
+                      sds((slots,), jnp.float32), sds((), jnp.bool_),
+                      key_sds),
+                carries=(1,), tags=hot))
+    return points

@@ -32,7 +32,7 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(
     r"=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
+    r"(-start|-done)?\(")
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -60,15 +60,29 @@ class CollectiveStats:
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Count each collective ONCE and charge its RESULT bytes once.
+
+    Async collectives lower to a `-start` / `-done` pair. Only the start is
+    counted (the done is the same transfer completing — counting both would
+    double every async collective), and a start's printed result is the
+    tuple `(operand-alias, result)`, so summing the whole tuple used to
+    double its bytes too: only the final tuple element (the actual result
+    buffer) is charged, which makes async and sync lowerings of the same op
+    cost the same wire bytes."""
     counts: Dict[str, int] = {}
     by_kind: Dict[str, int] = {}
     wire = 0.0
     factors = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}
     for m in _OP_RE.finditer(hlo_text):
-        shape_str, kind = m.group(1), m.group(2)
-        if "-done(" in m.group(0):
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
             continue
+        if suffix == "-start" and shape_str.startswith("("):
+            shapes = _SHAPE_RE.findall(shape_str)
+            if shapes:
+                dtype, dims = shapes[-1]
+                shape_str = f"{dtype}[{dims}]"
         b = _shape_bytes(shape_str)
         counts[kind] = counts.get(kind, 0) + 1
         by_kind[kind] = by_kind.get(kind, 0) + b
@@ -127,6 +141,56 @@ class Roofline:
             "roofline_fraction": self.roofline_fraction,
             "collective_counts": self.counts,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Per-entry-point collective budget for the static analyzer.
+
+    allow:           max instruction count per collective kind. An empty
+                     dict is the COLLECTIVE-FREE budget — the contract for
+                     slot-parallel decode, which must stay embarrassingly
+                     parallel over slots.
+    max_wire_bytes:  ceiling on factor-weighted wire bytes per device
+                     (0 = no byte ceiling, counts only). TP entry points
+                     declare measured bytes plus headroom so an XLA-version
+                     wobble passes but a new collective does not.
+    """
+    allow: Tuple[Tuple[str, int], ...] = ()
+    max_wire_bytes: float = 0.0
+
+    @classmethod
+    def collective_free(cls) -> "CollectiveBudget":
+        return cls(allow=(), max_wire_bytes=0.0)
+
+    @classmethod
+    def from_counts(cls, counts: Dict[str, int],
+                    wire_bytes: float, headroom: float = 1.5
+                    ) -> "CollectiveBudget":
+        """Bless a measured profile as the budget (with byte headroom)."""
+        return cls(allow=tuple(sorted(counts.items())),
+                   max_wire_bytes=float(wire_bytes) * headroom)
+
+    def to_dict(self) -> dict:
+        return {"allow": dict(self.allow),
+                "max_wire_bytes": self.max_wire_bytes}
+
+
+def check_budget(stats: CollectiveStats,
+                 budget: CollectiveBudget) -> List[str]:
+    """Budget violations for one entry point's compiled module ([] = ok)."""
+    out: List[str] = []
+    allow = dict(budget.allow)
+    for kind, n in sorted(stats.counts.items()):
+        cap = allow.get(kind, 0)
+        if n > cap:
+            what = ("collective-free entry emits" if not allow
+                    else f"budget allows {cap}, compiled module has")
+            out.append(f"{kind}: {what} {n} instruction(s)")
+    if budget.max_wire_bytes and stats.wire_bytes > budget.max_wire_bytes:
+        out.append(f"wire bytes {stats.wire_bytes:.0f} exceed budget "
+                   f"{budget.max_wire_bytes:.0f}")
+    return out
 
 
 def roofline_terms(cost: dict, coll: CollectiveStats,

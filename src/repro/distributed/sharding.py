@@ -162,6 +162,33 @@ def param_sharding(shapes, mesh: Mesh, profile: str = "tp"):
     return jax.tree_util.tree_map_with_path(leaf, shapes)
 
 
+def _strip_batch_axes(spec: P) -> P:
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in ("data", "pod"))
+        out.append(kept[0] if len(kept) == 1 else (kept or None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_sharding_serving(shapes, mesh: Mesh, profile: str = "tp"):
+    """Inference parameter placement: TP over 'model' only — the batch
+    axes ('data'/'pod') REPLICATE the weights instead of FSDP-sharding
+    them. Training's data-axis shard is a memory optimization paid for
+    with an all-gather per use; inside the decode scan that puts a weight
+    gather (or a row-parallel partial-sum all-reduce) in every step of the
+    hot path, which breaks the slot-parallel collective-free contract the
+    static analyzer enforces."""
+    tree = param_sharding(shapes, mesh, profile)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _strip_batch_axes(s.spec)), tree)
+
+
 def cache_sharding(shapes, mesh: Mesh):
     """Caches are stacked over super-blocks (leading dim) — shift always 1."""
     def leaf(path, x):

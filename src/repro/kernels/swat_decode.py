@@ -44,13 +44,28 @@ from repro.kernels.swat_attention import LANES, NEG_INF
 
 logger = logging.getLogger(__name__)
 _PAD_WARNED: set = set()
+_PAD_EVENTS: list = []
+
+
+def consume_pad_events() -> list:
+    """Drain the structured pad-fallback record (one dict per offending W
+    seen since the last drain). The static analyzer (repro.analysis) calls
+    this after tracing an entry point so an odd window size surfaces as a
+    warn-level finding in ANALYSIS.json instead of only a log line."""
+    out, _PAD_EVENTS[:] = list(_PAD_EVENTS), []
+    return out
 
 
 def _warn_pad(w: int, block_kv: int) -> None:
     """One-time (per W) warning for the pad-and-copy fallback: padding the
     cache to a block multiple COPIES the whole cache every decode call —
     engine ring allocations are pre-rounded to avoid it, so hitting this
-    means an ad-hoc capacity leaked into a hot path."""
+    means an ad-hoc capacity leaked into a hot path. Every distinct W is
+    also recorded as a structured event for the analyzer (the log dedups
+    per process; the event buffer dedups per drain)."""
+    if not any(e["w"] == w for e in _PAD_EVENTS):
+        _PAD_EVENTS.append({"w": w, "block_kv": block_kv,
+                            "min_block": _MIN_BLOCK_KV})
     if w in _PAD_WARNED:
         return
     _PAD_WARNED.add(w)

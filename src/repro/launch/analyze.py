@@ -1,0 +1,123 @@
+"""swatlint driver: statically analyze the serving matrix, gate on the
+committed ANALYSIS.json baseline.
+
+    PYTHONPATH=src python -m repro.launch.analyze --check   # CI gate
+    PYTHONPATH=src python -m repro.launch.analyze --write   # bless baseline
+
+The matrix mirrors the serving configurations the test suite and
+benchmarks exercise: single-host dense, window-attention pallas decode,
+speculative decode, slot-parallel (4x1) and tensor-parallel (2x2) meshes
+on a forced 4-device CPU topology. Everything is traced on
+ShapeDtypeStructs — no real decoding happens; runtime is all XLA
+compiles.
+
+Exit codes: 0 clean, 1 baseline violations (new errors, warn growth,
+lowering growth), 2 stale baseline (new engines/families — re-bless with
+--write in the same PR that adds them).
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff against the committed ANALYSIS.json and "
+                         "exit nonzero on violations")
+    ap.add_argument("--write", action="store_true",
+                    help="bless this run as the new ANALYSIS.json baseline")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline path (default: repo-root ANALYSIS.json)")
+    ap.add_argument("--engines", default=None,
+                    help="comma list to restrict the matrix, e.g. "
+                         "'single,tp_2x2'")
+    ap.add_argument("--device-count", type=int, default=4)
+    args = ap.parse_args()
+
+    need = args.device_count
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={need} " + flags)
+
+    import jax  # noqa: E402  (after XLA_FLAGS)
+
+    from repro.analysis import baselines, report as Rep
+    from repro.configs import get_smoke_config, with_swat
+    from repro.core import model as Mod
+    from repro.launch.mesh import parse_mesh
+    from repro.serving.engine import ServingEngine
+
+    dense = get_smoke_config("llama3p2_1b")
+    swat = with_swat(dense, window=16, num_global=4)
+    params = Mod.init_model(jax.random.PRNGKey(0), dense)
+    swat_params = Mod.init_model(jax.random.PRNGKey(0), swat)
+
+    def build(label):
+        if label == "single":
+            return ServingEngine(dense, params, batch_slots=2, max_len=128,
+                                 scan_steps=4)
+        if label == "swat_pallas":
+            return ServingEngine(swat, swat_params, batch_slots=2,
+                                 max_len=128, scan_steps=2,
+                                 decode_impl="pallas")
+        if label == "spec_k2":
+            return ServingEngine(dense, params, batch_slots=2, max_len=128,
+                                 scan_steps=4, speculative=2)
+        if label == "slot_parallel_4x1":
+            return ServingEngine(dense, params, batch_slots=4, max_len=128,
+                                 scan_steps=4, mesh=parse_mesh("4x1"))
+        if label == "tp_2x2":
+            return ServingEngine(dense, params, batch_slots=2, max_len=128,
+                                 scan_steps=4, mesh=parse_mesh("2x2"))
+        raise SystemExit(f"unknown engine label: {label}")
+
+    matrix = ["single", "swat_pallas", "spec_k2", "slot_parallel_4x1",
+              "tp_2x2"]
+    if args.engines:
+        matrix = [x.strip() for x in args.engines.split(",") if x.strip()]
+
+    baseline = baselines.load(args.baseline)
+    base_engines = (baseline or {}).get("engines") or {}
+
+    per_engine = {}
+    for label in matrix:
+        print(f"[analyze] {label}: tracing...", flush=True)
+        eng = build(label)
+        per_engine[label] = Rep.analyze_engine(
+            eng, label=label,
+            baseline=None if args.write else base_engines.get(label))
+        s = per_engine[label]["summary"]
+        print(f"[analyze] {label}: {s['entries']} entries, "
+              f"{s['errors']} errors, {s['warnings']} warnings", flush=True)
+
+    fresh = Rep.merge_reports(per_engine, meta={
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "matrix": matrix,
+    })
+
+    if args.write:
+        path = baselines.save(fresh, args.baseline)
+        print(f"[analyze] wrote baseline: {path}")
+        print(json.dumps(fresh["summary"]))
+        return 0
+
+    violations = baselines.diff(fresh, baseline)
+    stale = baselines.is_stale(fresh, baseline)
+    for v in violations:
+        print(f"[analyze] VIOLATION: {v}")
+    for s in stale:
+        print(f"[analyze] STALE BASELINE: {s}")
+    if not violations and not stale:
+        print(f"[analyze] clean: {json.dumps(fresh['summary'])}")
+    if args.check:
+        return 1 if violations else (2 if stale else 0)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

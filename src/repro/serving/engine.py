@@ -37,6 +37,7 @@ to the single-device engine (tests/test_serving_sharded.py).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -44,6 +45,14 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Partitionable threefry keeps sharded sampling collective-free: legacy
+# threefry (the pre-0.4.36 default) lowers cross-device permutes and a
+# u32 all-reduce whenever an RNG output is sharded, which would plant
+# collectives inside the slot-parallel decode scan. Trace-time flag, so
+# flipping it here covers every program the engine compiles; it changes
+# sampled (temps>0) token streams but never greedy decoding.
+jax.config.update("jax_threefry_partitionable", True)
 
 from repro.core import model as Mod
 from repro.core.types import ModelConfig
@@ -85,25 +94,35 @@ class _Compiled:
 
     With a mesh, every function is keyed by its batch-row count so each
     shape gets exact `in_shardings`/`out_shardings` (the sharding rules are
-    divisibility-aware, so specs depend on the concrete row count)."""
+    divisibility-aware, so specs depend on the concrete row count).
+
+    donate=True (the default) donates the ring-cache carry of every entry
+    point that consumes one — the scan/spec-scan decode blocks, the
+    cache-insert, and the chunked-prefill carry — so XLA aliases the caches
+    in place instead of copying the full multi-MB buffer per call. The
+    analyzer (repro.analysis) proves the aliases hold in the compiled
+    executables; donate=False keeps the pre-donation programs around as the
+    analyzer's known-bad fixture and for A/B benchmarking."""
 
     def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
                  top_k: int, mesh=None, profile: str = "tp",
                  tokens_per_step: int = 1, speculative: int = 0,
-                 draft: Optional[NGramDrafter] = None):
+                 draft: Optional[NGramDrafter] = None, donate: bool = True):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
         self.tokens_per_step = tokens_per_step
         self.lookahead = tokens_per_step - 1
         self.speculative = speculative
         self.drafter = get_drafter(draft) if speculative else None
+        self.donate = donate
         self.mesh, self.profile = mesh, profile
         if mesh is not None:
             from repro.distributed import sharding as Sh
             self._Sh = Sh
             pshapes = jax.eval_shape(
                 lambda: Mod.init_model(jax.random.PRNGKey(0), cfg))
-            self.param_sharding = Sh.param_sharding(pshapes, mesh, profile)
+            self.param_sharding = Sh.param_sharding_serving(pshapes, mesh,
+                                                            profile)
             self._rep = Sh.replicated(mesh)
         else:
             self._Sh = None
@@ -131,6 +150,29 @@ class _Compiled:
 
     def _sds(self, shape, dtype=jnp.int32):
         return jax.ShapeDtypeStruct(shape, dtype)
+
+    def slot_vector_shardings(self, slots: int) -> Dict[str, Any]:
+        """Placement of the staged per-slot decode vectors (engine._dev).
+        Must match the scan/spec_scan in_shardings exactly: the block
+        dispatch runs under transfer_guard("disallow"), so a host-staged
+        vector left on the default device would need an implicit
+        (disallowed) reshard onto the mesh."""
+        veci = self.batch_sharding(self._sds((slots,)), slots)
+        sh = {"tok": veci, "budget": veci,
+              "active": self.batch_sharding(
+                  self._sds((slots,), jnp.bool_), slots),
+              "temps": self.batch_sharding(
+                  self._sds((slots,), jnp.float32), slots),
+              "anyt": self._rep}
+        if self.drafter is not None:
+            sh["hist"] = self.batch_sharding(
+                self._sds((slots, self.drafter.history)), slots)
+            sh["hcnt"] = veci
+        return sh
+
+    def _donate(self, *argnums: int) -> Tuple[int, ...]:
+        """Carry argnums to donate (empty when donation is disabled)."""
+        return tuple(argnums) if self.donate else ()
 
     def slot_quantum(self, slots: int) -> int:
         """Slot-axis size when the engine's slot count shards over it —
@@ -176,8 +218,12 @@ class _Compiled:
         if n not in self._chunk_fns:
             act = self._act_sharding(n)
             fn = functools.partial(self._chunk_impl, act_sharding=act)
+            # the chunk loop carries (caches, last_logits): donate both so
+            # walking a long prompt re-uses one cache allocation instead of
+            # copying it per chunk
+            don = self._donate(1, 5)
             if self.mesh is None:
-                self._chunk_fns[n] = jax.jit(fn)
+                self._chunk_fns[n] = jax.jit(fn, donate_argnums=don)
             else:
                 vec = self.batch_sharding(self._sds((n,)), n)
                 tok_sh = self.batch_sharding(self._sds((n, 1)), n)
@@ -188,7 +234,8 @@ class _Compiled:
                     fn,
                     in_shardings=(self.param_sharding, cache_sh, tok_sh,
                                   self._rep, vec, logit_sh),
-                    out_shardings=(logit_sh, cache_sh))
+                    out_shardings=(logit_sh, cache_sh),
+                    donate_argnums=don)
         return self._chunk_fns[n]
 
     def _chunk_impl(self, params, caches, tok, pos0, lengths, last_logits,
@@ -216,14 +263,19 @@ class _Compiled:
                 return jax.tree.map(
                     lambda f, o: f.at[:, idx].set(o.astype(f.dtype)),
                     full, one)
+            # donate the full slot caches: admission scatters n fresh rows
+            # into them, everything else is carried through unchanged — an
+            # un-donated insert copies every cache at every admission
+            don = self._donate(0)
             if self.mesh is None:
-                self._insert_fns[key] = jax.jit(fn)
+                self._insert_fns[key] = jax.jit(fn, donate_argnums=don)
             else:
                 self._insert_fns[key] = jax.jit(
                     fn,
                     in_shardings=(self.cache_sharding(slots),
                                   self.cache_sharding(n), self._rep),
-                    out_shardings=self.cache_sharding(slots))
+                    out_shardings=self.cache_sharding(slots),
+                    donate_argnums=don)
         return self._insert_fns[key]
 
     def sample(self, n: int):
@@ -232,12 +284,16 @@ class _Compiled:
             if self.mesh is None:
                 self._sample_fns[n] = jax.jit(fn)
             else:
-                vecf = self.batch_sharding(self._sds((n,), jnp.float32), n)
                 veci = self.batch_sharding(self._sds((n,)), n)
                 logit_sh = self.batch_sharding(
                     self._sds((n, self.cfg.vocab_size), jnp.float32), n)
+                # temps rides REPLICATED (16 bytes): sampling's all-greedy
+                # fast path does `jnp.any(temps > 0)`, which on a slot-
+                # sharded vector lowers to a pred[] all-reduce — the only
+                # collective left on the slot-parallel hot path. Replicated
+                # it folds to a local reduce.
                 self._sample_fns[n] = jax.jit(
-                    fn, in_shardings=(self._rep, logit_sh, vecf),
+                    fn, in_shardings=(self._rep, logit_sh, self._rep),
                     out_shardings=veci)
         return self._sample_fns[n]
 
@@ -262,14 +318,15 @@ class _Compiled:
         lookahead = self.lookahead
         act = self._act_sharding(slots)
 
-        def fn(params, caches, tok, active, budget, temps, key):
+        def fn(params, caches, tok, active, budget, temps, anyt, key):
             def body(carry, _):
                 caches, tok, active, budget, key = carry
                 logits, caches = Mod.decode_step(
                     params, cfg, {"tokens": tok[:, None]}, caches, impl=impl,
                     act_sharding=act, lookahead=lookahead)
                 key, sub = jax.random.split(key)
-                nxt = sampling.sample(sub, logits[:, 0], temps, top_k)
+                nxt = sampling.sample(sub, logits[:, 0], temps, top_k,
+                                      any_sampling=anyt)
                 nxt = jnp.where(active, nxt, tok)
                 emitted = active
                 budget = budget - active.astype(jnp.int32)
@@ -281,8 +338,14 @@ class _Compiled:
             caches, tok, active, budget, key = carry
             return caches, tok, active, budget, key, toks, emit
 
+        # donate the ring caches: the decode block's only multi-MB carry.
+        # Un-donated, XLA materializes a full copy of every K/V ring per
+        # block (the analyzer's first real catch); donated, the compiled
+        # executable aliases them input->output and the scan mutates the
+        # same buffers the engine re-feeds next block.
+        don = self._donate(1)
         if self.mesh is None:
-            return jax.jit(fn)
+            return jax.jit(fn, donate_argnums=don)
         cache_sh = self.cache_sharding(slots)
         veci = self.batch_sharding(self._sds((slots,)), slots)
         vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
@@ -291,8 +354,9 @@ class _Compiled:
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
-                          vecf, self._rep),
-            out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk))
+                          vecf, self._rep, self._rep),
+            out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk),
+            donate_argnums=don)
 
     # ------------------------------------------------------- speculative --
     def spec_scan(self, n: int, slots: int):
@@ -342,7 +406,8 @@ class _Compiled:
         drafter = self.drafter
         act = self._act_sharding(slots, t)
 
-        def fn(params, caches, tok, active, budget, temps, key, hist, hcnt):
+        def fn(params, caches, tok, active, budget, temps, anyt, key, hist,
+               hcnt):
             toks0 = jnp.zeros((n, slots, t), jnp.int32)
             emit0 = jnp.zeros((n, slots, t), jnp.bool_)
             active0 = active
@@ -374,7 +439,8 @@ class _Compiled:
                 subs = jax.vmap(
                     lambda j: jax.random.fold_in(sub, j))(jnp.arange(t))
                 ver = jax.vmap(
-                    lambda kj, lj: sampling.sample(kj, lj, temps, top_k),
+                    lambda kj, lj: sampling.sample(kj, lj, temps, top_k,
+                                                   any_sampling=anyt),
                     in_axes=(0, 1), out_axes=1)(subs, logits)  # (B, T)
                 match = (drafts == ver[:, :k]).astype(jnp.int32)
                 acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
@@ -402,8 +468,9 @@ class _Compiled:
             return (caches, tok, active, budget, key, hist, hcnt, toks,
                     emit, steps)
 
+        don = self._donate(1)            # ring caches: see _make_scan
         if self.mesh is None:
-            return jax.jit(fn)
+            return jax.jit(fn, donate_argnums=don)
         cache_sh = self.cache_sharding(slots)
         veci = self.batch_sharding(self._sds((slots,)), slots)
         vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
@@ -415,18 +482,20 @@ class _Compiled:
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
-                          vecf, self._rep, hist_sh, veci),
+                          vecf, self._rep, self._rep, hist_sh, veci),
             out_shardings=(cache_sh, veci, vecb, veci, self._rep, hist_sh,
-                           veci, blk, blk, self._rep))
+                           veci, blk, blk, self._rep),
+            donate_argnums=don)
 
 
 @functools.lru_cache(maxsize=16)
 def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
                   top_k: int, mesh=None, profile: str = "tp",
                   tokens_per_step: int = 1, speculative: int = 0,
-                  draft: Optional[NGramDrafter] = None) -> _Compiled:
+                  draft: Optional[NGramDrafter] = None,
+                  donate: bool = True) -> _Compiled:
     return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
-                     tokens_per_step, speculative, draft)
+                     tokens_per_step, speculative, draft, donate)
 
 
 class ServingEngine:
@@ -436,7 +505,8 @@ class ServingEngine:
                  max_prefill_tokens: int = 8192, pad_to: int = 16,
                  top_k: int = 0, decode_impl: str = "ref",
                  mesh=None, profile: str = "tp", tokens_per_step: int = 1,
-                 speculative: int = 0, draft: Optional[NGramDrafter] = None):
+                 speculative: int = 0, draft: Optional[NGramDrafter] = None,
+                 donate: bool = True, transfer_guard: bool = True):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
@@ -464,7 +534,21 @@ class ServingEngine:
         the serving sharding rules, and every jitted call runs partitioned.
         batch_slots should be a multiple of the slot-axis size
         (('pod',)'data') for the slot dim to actually shard; indivisible
-        counts degrade gracefully to replication."""
+        counts degrade gracefully to replication.
+
+        donate: donate the ring-cache carries of the decode-scan,
+        cache-insert, and chunked-prefill entry points so the compiled
+        executables alias them in place (no full-cache copy per block —
+        tokens are unchanged, only buffer reuse). False keeps the copying
+        programs: the analyzer's known-bad fixture and the serve_bench
+        donation A/B.
+
+        transfer_guard: run the steady-state decode dispatch under
+        jax.transfer_guard("disallow") so any implicit host<->device
+        transfer that sneaks into the hot loop raises instead of silently
+        syncing every block (the scheduled host syncs — staging admitted
+        slots, draining block outputs — are explicit transfers and stay
+        legal)."""
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -482,12 +566,13 @@ class ServingEngine:
                 "roll back); config %s does not qualify" % (cfg.name,))
         self.tokens_per_step = max(1, tokens_per_step, self.speculative + 1)
         self.mesh, self.profile = mesh, profile
+        self.transfer_guard = transfer_guard
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
                                 profile, self.tokens_per_step,
                                 self.speculative,
                                 get_drafter(draft) if self.speculative
-                                else None)
+                                else None, donate)
         self.drafter = self._c.drafter
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
@@ -602,17 +687,42 @@ class ServingEngine:
                 tok=jnp.asarray(self.slot_last),
                 active=jnp.asarray(active),
                 budget=jnp.asarray(self.slot_budget),
-                temps=jnp.asarray(self.slot_temp))
+                temps=jnp.asarray(self.slot_temp),
+                # the all-greedy fast-path predicate, precomputed on host:
+                # reducing the slot-sharded temps on device would cost a
+                # pred[] all-reduce in every scan step (sampling.sample)
+                anyt=jnp.asarray(bool(np.any((self.slot_temp > 0)
+                                             & active))))
             if self.speculative:
                 self._dev["hist"] = jnp.asarray(self.slot_hist)
                 self._dev["hcnt"] = jnp.asarray(self.slot_hcnt)
+            if self.mesh is not None:
+                # explicit mesh placement, matching the scan in_shardings —
+                # the guarded dispatch below may not reshard implicitly
+                sh = self._c.slot_vector_shardings(self.slots)
+                self._dev = {k: jax.device_put(v, sh[k])
+                             for k, v in self._dev.items()}
         dev = self._dev
+        if self.mesh is not None:
+            # admission splits self.key on host (default placement); the
+            # scan consumes it replicated — re-place explicitly (no-op
+            # between consecutive blocks: scan outputs carry _rep already)
+            self.key = jax.device_put(self.key, self._c._rep)
+        # steady-state guard: every operand is device-resident by now, so
+        # the block dispatch must not transfer ANYTHING implicitly — a
+        # host-synced scalar or np-array operand inside this loop taxes
+        # every block and is exactly what the analyzer's host-sync rule
+        # lints for. Explicit syncs (np.asarray on the outputs below) stay
+        # legal under "disallow".
+        guard = (jax.transfer_guard("disallow") if self.transfer_guard
+                 else contextlib.nullcontext())
         if self.speculative:
-            (self.caches, tok, active_out, budget, self.key, hist, hcnt,
-             toks, emit, steps) = self._c.spec_scan(n, self.slots)(
-                self.params, self.caches, dev["tok"], dev["active"],
-                dev["budget"], dev["temps"], self.key, dev["hist"],
-                dev["hcnt"])
+            with guard:
+                (self.caches, tok, active_out, budget, self.key, hist, hcnt,
+                 toks, emit, steps) = self._c.spec_scan(n, self.slots)(
+                    self.params, self.caches, dev["tok"], dev["active"],
+                    dev["budget"], dev["temps"], dev["anyt"], self.key,
+                    dev["hist"], dev["hcnt"])
             # drafter state stays device-resident too; _prefill_into
             # materializes to numpy only when it needs to seed a row
             self.slot_hist = hist
@@ -626,10 +736,11 @@ class ServingEngine:
             self.stats["draft_proposed"] += self.speculative * int(ran.sum())
             self.stats["draft_accepted"] += int((counts[ran] - 1).sum())
         else:
-            (self.caches, tok, active_out, budget, self.key, toks, emit) = \
-                self._c.scan(n, self.slots)(
+            with guard:
+                (self.caches, tok, active_out, budget, self.key, toks,
+                 emit) = self._c.scan(n, self.slots)(
                     self.params, self.caches, dev["tok"], dev["active"],
-                    dev["budget"], dev["temps"], self.key)
+                    dev["budget"], dev["temps"], dev["anyt"], self.key)
             dev.update(tok=tok, active=active_out, budget=budget)
             toks, emit = np.asarray(toks), np.asarray(emit)
         self.stats["tokens_emitted"] += int(emit.sum())

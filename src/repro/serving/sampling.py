@@ -14,9 +14,15 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(key, logits, temperatures, top_k: int = 0):
+def sample(key, logits, temperatures, top_k: int = 0, any_sampling=None):
     """Draw one token per row. logits: (B, V); temperatures: (B,) — rows
     with temperature <= 0 are greedy. top_k: static int, 0 disables.
+    any_sampling: optional scalar bool, the precomputed `any(temps > 0)`
+    predicate. Under a slot-sharded mesh the in-place reduction lowers to
+    a pred[] all-reduce; a caller that already knows the answer (the
+    engine stages slot temperatures from host state) passes it here and
+    keeps the decode scan collective-free. Either way the chosen branch —
+    and therefore every token — is identical.
 
     The categorical draw consumes the same randomness whatever the active
     mask or temperatures are, so a scan-decode loop and a stepwise loop that
@@ -43,4 +49,6 @@ def sample(key, logits, temperatures, top_k: int = 0):
         drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
         return jnp.where(temperatures > 0, drawn, greedy)
 
-    return jax.lax.cond(jnp.any(temperatures > 0), full, greedy_only, logits)
+    if any_sampling is None:
+        any_sampling = jnp.any(temperatures > 0)
+    return jax.lax.cond(any_sampling, full, greedy_only, logits)

@@ -1,0 +1,346 @@
+"""swatlint rule suite: every rule family has a deliberately-broken toy
+that trips EXACTLY its rule, and a known-good twin asserted clean.
+
+Covers (ISSUE 7):
+  * donation/aliasing      — un-donated large carry caught; donated twin
+                             proven aliased in the compiled executable
+  * host-sync              — callback inside lax.scan caught
+  * dtype promotion        — bf16->f32 upcast feeding a matmul caught
+  * collective budget      — slot-axis reduction under a forced 4-device
+                             mesh caught (subprocess); async -start/-done
+                             HLO double-count regression
+  * recompile audit        — weak-type leak + lowering-count cap
+  * engine integration     — default engine clean, donate=False engine is
+                             the known-bad fixture; pad-fallback events
+                             become warn findings
+  * baselines              — diff/check_artifact gate semantics
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import baselines, report as Rep, rules as R, tracer as T
+from repro.distributed.hlo_analysis import (CollectiveBudget, check_budget,
+                                            parse_collectives)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def point(fn, args, carries=(), tags=frozenset(), name="toy"):
+    return T.EntryPoint(name=name, family=name, fn=fn, args=args,
+                        carries=carries, tags=tags)
+
+
+# ------------------------------------------------------------- donation --
+
+BIG = sds((512, 512))            # 1 MiB: over the generic threshold
+
+
+def test_undonated_carry_is_caught():
+    fn = jax.jit(lambda c, x: (c + x, x.sum()))
+    tr = T.trace(point(fn, (BIG, BIG), carries=(0,)))
+    f = R.check_donation(tr)
+    assert any(x.rule == "donation" and x.severity == "error" for x in f)
+    assert not R.check_host_sync(tr) and not R.check_dtype_promotion(tr)
+
+
+def test_donated_carry_is_clean_and_aliased():
+    fn = jax.jit(lambda c, x: (c + x, x.sum()), donate_argnums=(0,))
+    tr = T.trace(point(fn, (BIG, BIG), carries=(0,)))
+    assert R.check_donation(tr) == []
+    # the proof the ISSUE asks for: donation survived into the compiled
+    # executable's input-output alias table, not just the StableHLO marker
+    assert tr.alias_pairs, "compiled executable has no input-output alias"
+
+
+def test_forgotten_carry_generic_warn():
+    # nobody declared carries, but a 1 MiB input round-trips to an output
+    # of the same shape/dtype: the generic rule flags it warn-level
+    fn = jax.jit(lambda c, x: (c * 2.0, x.sum()))
+    tr = T.trace(point(fn, (BIG, BIG)))
+    f = R.check_donation(tr)
+    assert any(x.rule == "donation" and x.severity == "warn" for x in f)
+
+
+def test_pruned_unused_leaf_not_flagged():
+    # an unused carry leaf is pruned from the lowering (keep_unused=False);
+    # that must count as "nothing copied", not as a dropped donation
+    fn = jax.jit(lambda c, x: (c[0] + x, x.sum()), donate_argnums=(0,))
+    tr = T.trace(point(fn, ((BIG, sds((8, 8))), BIG), carries=(0,)))
+    assert R.check_donation(tr) == []
+
+
+# ------------------------------------------------------------ host sync --
+
+def test_callback_inside_scan_is_caught():
+    def bad(x):
+        def body(c, _):
+            c = jax.pure_callback(lambda a: np.asarray(a),
+                                  jax.ShapeDtypeStruct(x.shape, x.dtype), c)
+            return c, None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    tr = T.trace(point(jax.jit(bad), (sds((8,)),)), compile=False)
+    f = R.check_host_sync(tr)
+    assert any(x.rule == "host_sync" and x.severity == "error"
+               and "scan" in x.details["context"] for x in f)
+    assert not R.check_dtype_promotion(tr)
+
+
+def test_callback_on_hot_path_is_error_even_at_top_level():
+    def bad(x):
+        return jax.pure_callback(lambda a: np.asarray(a),
+                                 jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+    tr = T.trace(point(jax.jit(bad), (sds((8,)),),
+                       tags=frozenset({"decode_hot_path"})), compile=False)
+    assert any(x.severity == "error" for x in R.check_host_sync(tr))
+
+
+def test_clean_scan_no_host_sync():
+    def good(x):
+        out, _ = jax.lax.scan(lambda c, _: (c * 2, None), x, None, length=3)
+        return out
+    tr = T.trace(point(jax.jit(good), (sds((8,)),)), compile=False)
+    assert R.check_host_sync(tr) == []
+
+
+# ------------------------------------------------------ dtype promotion --
+
+def test_bf16_upcast_matmul_is_caught():
+    def bad(a, b):
+        return a.astype(jnp.float32) @ b.astype(jnp.float32)
+    tr = T.trace(point(jax.jit(bad), (sds((16, 16), jnp.bfloat16),
+                                      sds((16, 16), jnp.bfloat16))),
+                 compile=False)
+    f = R.check_dtype_promotion(tr)
+    assert any(x.rule == "dtype_promotion" for x in f)
+
+
+def test_bf16_native_matmul_is_clean():
+    # staying bf16 — or asking for f32 ACCUMULATION via
+    # preferred_element_type — involves no convert and must not trip
+    def good(a, b):
+        return jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    tr = T.trace(point(jax.jit(good), (sds((16, 16), jnp.bfloat16),
+                                      sds((16, 16), jnp.bfloat16))),
+                 compile=False)
+    assert R.check_dtype_promotion(tr) == []
+
+
+# ---------------------------------------------- hlo_analysis regression --
+
+_ASYNC_HLO = """
+ENTRY %main {
+  %p0 = f32[128]{0} parameter(0)
+  %ars = (f32[128]{0}, f32[128]{0}) all-reduce-start(f32[128]{0} %p0)
+  %ard = f32[128]{0} all-reduce-done((f32[128]{0}, f32[128]{0}) %ars)
+  %sync = f32[128]{0} all-reduce(f32[128]{0} %ard)
+  %ag = (f32[32]{0}, f32[128]{0}) all-gather-start(f32[32]{0} %p1)
+  %agd = f32[128]{0} all-gather-done((f32[32]{0}, f32[128]{0}) %ag)
+}
+"""
+
+
+def test_async_start_done_counted_once():
+    """-start/-done pairs are ONE collective, and a start's tuple result
+    (operand-alias, result) must not double its bytes: one async and one
+    sync all-reduce of the same shape cost the same."""
+    st = parse_collectives(_ASYNC_HLO)
+    assert st.counts == {"all-reduce": 2, "all-gather": 1}
+    assert st.bytes_by_kind["all-reduce"] == 2 * 128 * 4
+    assert st.bytes_by_kind["all-gather"] == 128 * 4
+    assert st.wire_bytes == 2.0 * 2 * 128 * 4 + 128 * 4
+
+
+def test_collective_budget_check():
+    st = parse_collectives(_ASYNC_HLO)
+    free = CollectiveBudget.collective_free()
+    viol = check_budget(st, free)
+    assert len(viol) == 2 and all("collective-free" in v for v in viol)
+    blessed = CollectiveBudget.from_counts(st.counts, st.wire_bytes)
+    assert check_budget(st, blessed) == []
+    tight = CollectiveBudget(allow=(("all-gather", 1), ("all-reduce", 1)),
+                             max_wire_bytes=1.0)
+    viol = check_budget(st, tight)
+    assert any("wire bytes" in v for v in viol)
+    assert any("budget allows 1" in v for v in viol)
+
+
+# ------------------------------------------------------ recompile audit --
+
+def test_weak_type_and_lowering_cap():
+    fn = jax.jit(lambda x: x * 2)
+    tr_a = T.trace(point(fn, (sds((4,)),), name="fam"), compile=False)
+    tr_b = T.trace(point(fn, (sds((8,)),), name="fam"), compile=False)
+    assert tr_a.compile_key != tr_b.compile_key
+    f = R.audit_recompiles([tr_a, tr_b], max_per_family={"fam": 1})
+    assert any(x.rule == "recompile" and x.severity == "error" for x in f)
+    assert R.audit_recompiles([tr_a, tr_b], max_per_family={"fam": 2}) == []
+    # weak-typed scalar leaks fork compile keys for identical compute
+    weak = jax.eval_shape(lambda: jnp.asarray(1.0) * 1.0)
+    trw = T.trace(point(jax.jit(lambda x: x + 0.0), (weak,), name="w"),
+                  compile=False)
+    if any(l.weak_type for l in trw.in_leaves):
+        assert any(x.rule == "recompile" and x.severity == "warn"
+                   for x in R.audit_recompiles([trw]))
+
+
+# ------------------------------------------------------- pad fallback --
+
+def test_pad_event_becomes_warn_finding():
+    from repro.kernels import swat_decode
+    swat_decode.consume_pad_events()
+    swat_decode._warn_pad(17, 16)
+    events = swat_decode.consume_pad_events()
+    assert events and events[0]["w"] == 17
+    assert swat_decode.consume_pad_events() == []      # drained
+    rep = Rep.analyze_entry_points([], pad_events=events, label="kern")
+    assert rep["summary"]["warnings"] == 1
+    assert rep["findings"][0]["rule"] == "pad_fallback"
+
+
+# -------------------------------------------------- engine integration --
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    from repro.configs import get_smoke_config
+    from repro.core import model as Mod
+    from repro.serving.engine import ServingEngine
+    cfg = get_smoke_config("llama3p2_1b")
+    params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+    mk = lambda donate: ServingEngine(cfg, params, batch_slots=2,
+                                      max_len=128, scan_steps=2,
+                                      donate=donate)
+    return mk(True), mk(False)
+
+
+def scan_entries(engine):
+    return [p for p in T.engine_entry_points(
+                engine, batch_sizes=[1], scan_lens=[2])
+            if p.family in ("scan", "cache_insert")]
+
+
+def test_engine_hot_path_clean(engine_pair):
+    good, _ = engine_pair
+    rep = Rep.analyze_entry_points(scan_entries(good))
+    assert rep["summary"]["errors"] == 0, rep["findings"]
+    scan = next(v for k, v in rep["entries"].items() if k.startswith("scan"))
+    assert scan["carries_donated"] is True
+    assert scan["alias_pairs"] > 0          # aliased in compiled executable
+    assert scan["collectives"] == {}
+
+
+def test_engine_without_donation_is_caught(engine_pair):
+    _, bad = engine_pair
+    rep = Rep.analyze_entry_points(scan_entries(bad))
+    assert rep["summary"]["errors"] > 0
+    rules = {f["rule"] for f in rep["findings"]
+             if f["severity"] == "error"}
+    assert rules == {"donation"}
+
+
+# ------------------------------------------------------------ baselines --
+
+def _fake_report(errors=0, warns=0, lowerings=None):
+    findings = ([{"rule": "donation", "severity": "error", "entry": "e",
+                  "message": "m", "details": {}}] * errors
+                + [{"rule": "host_sync", "severity": "warn", "entry": "e",
+                    "message": "m", "details": {}}] * warns)
+    return {"swatlint": 1, "meta": {},
+            "engines": {"single": {"entries": {},
+                                   "lowerings": lowerings or {"scan": 1},
+                                   "budgets": {}, "findings": findings,
+                                   "summary": {"errors": errors,
+                                               "warnings": warns,
+                                               "entries": 0}}},
+            "summary": {"errors": errors, "warnings": warns, "entries": 0}}
+
+
+def test_baseline_diff_gates():
+    base = _fake_report()
+    assert baselines.diff(_fake_report(), base) == []
+    assert any("donation" in v for v in
+               baselines.diff(_fake_report(errors=1), base))
+    assert any("warning count" in v for v in
+               baselines.diff(_fake_report(warns=1), base))
+    assert any("lowerings" in v for v in
+               baselines.diff(_fake_report(lowerings={"scan": 2}), base))
+    # warn count may also SHRINK freely
+    assert baselines.diff(_fake_report(), _fake_report(warns=3)) == []
+
+
+def test_check_artifact_gate(tmp_path):
+    p = tmp_path / "A.json"
+    with pytest.raises(AssertionError):
+        baselines.check_artifact(str(p))
+    baselines.save(_fake_report(), str(p))
+    assert baselines.check_artifact(str(p))["summary"]["errors"] == 0
+    baselines.save(_fake_report(errors=2), str(p))
+    with pytest.raises(AssertionError):
+        baselines.check_artifact(str(p))
+
+
+def test_committed_baseline_is_clean():
+    rep = baselines.check_artifact()          # the committed ANALYSIS.json
+    assert rep["swatlint"] == 1
+    # the tentpole acceptance claims, as recorded in the artifact:
+    engines = rep["engines"]
+    for label in ("single", "slot_parallel_4x1", "tp_2x2"):
+        assert label in engines
+    for name, e in engines["slot_parallel_4x1"]["entries"].items():
+        if "decode_hot_path" in e["tags"]:
+            assert e["collectives"] == {}, (name, e)
+            assert e["carries_donated"] and e["alias_pairs"] > 0
+
+
+# ------------------------------------------- forced-mesh collective toy --
+
+@pytest.mark.slow
+def test_slot_axis_allgather_caught_under_mesh():
+    """A deliberate slot-axis reduction sharded over 4 forced CPU devices
+    trips the collective-free budget; the engine decode scan on the same
+    mesh stays clean (subprocess: device count must be set pre-import)."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import parse_mesh
+        from repro.analysis import rules as R, tracer as T
+        from repro.distributed.hlo_analysis import CollectiveBudget
+
+        mesh = parse_mesh("4x1")
+        sh = NamedSharding(mesh, P("data"))
+        fn = jax.jit(lambda x: x - x.mean(), in_shardings=(sh,),
+                     out_shardings=sh)
+        pt = T.EntryPoint(
+            name="toy_mean", family="toy_mean", fn=fn,
+            args=(jax.ShapeDtypeStruct((4, 64), jnp.float32),),
+            tags=frozenset({"slot_parallel", "decode_hot_path"}))
+        tr = T.trace(pt)
+        budget = R.budget_for(tr)
+        f = R.check_collectives(tr, budget)
+        assert f and all(x.rule == "collectives" for x in f), f
+        print("CAUGHT", sorted({x.severity for x in f}))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "CAUGHT ['error']" in out.stdout
