@@ -240,7 +240,47 @@ def smoke(rng):
     #    here even before the full `analyze --check` lane runs
     from repro.analysis import baselines
     baselines.check_artifact()
+
+    # 6. resilience gate over the committed BENCH_serve.json: a clean
+    #    serving run must have recorded ZERO degradation events (the
+    #    always-compiled guards are bystanders) and both chaos drills
+    #    must have actually fired — an artifact that says the engine
+    #    quarantined slots on a clean run, or that a drill was a no-op,
+    #    refuses here
+    check_serve_resilience()
     print("[kernel_bench] smoke OK")
+
+
+def check_serve_resilience(path=None):
+    """Gate on BENCH_serve.json's `resilience` section (written by
+    benchmarks/serve_bench.py, or merged by its --resilience-only mode):
+    clean run event-free and all-ok; quarantine drill quarantined exactly
+    one slot with healthy slots bitwise identical; pallas-failure drill
+    fell back exactly once with every request still ok."""
+    import json
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(path) as f:
+        payload = json.load(f)
+    res = payload.get("resilience")
+    assert res is not None, (
+        "BENCH_serve.json has no `resilience` section — regenerate with "
+        "benchmarks/serve_bench.py (--resilience-only merges just it)")
+    clean = res["clean"]
+    assert clean["events"] == 0 and clean["all_ok"], (
+        f"clean serving run recorded unexpected degradation: {clean} — "
+        "the fault guards fired without a fault plan; that is a real "
+        "engine regression, not an artifact problem")
+    q = res["quarantine_drill"]
+    assert q["quarantined"] == 1 and q["healthy_bitwise_identical"], (
+        f"quarantine drill did not behave: {q}")
+    fb = res["pallas_fallback_drill"]
+    assert fb["kernel_fallbacks"] == 1 and fb["all_ok"], (
+        f"pallas-failure drill did not behave: {fb}")
+    print(f"[kernel_bench] resilience gate: clean run event-free; "
+          f"drills fired (quarantined={q['quarantined']}, "
+          f"fallbacks={fb['kernel_fallbacks']})")
 
 
 def check_benchmark_artifact(path=None):

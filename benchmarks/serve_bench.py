@@ -30,6 +30,12 @@ Also prints ring-cache bytes (SWAT window spec) vs dense at the serving
 context — the paper's Fig. 3 linear-memory claim applied to decode — and
 writes the whole run to BENCH_serve.json (shapes, tok/s per mode, parity
 flags) so future PRs have a machine-readable perf trajectory to diff.
+
+A `resilience` section records the fault-injection probes (clean-run
+degradation events must be ZERO; the quarantine and pallas-fallback
+drills must fire) — `kernel_bench --smoke` refuses on a bad section.
+`--resilience-only` reruns just those probes and merges the section into
+the existing artifact.
 """
 import argparse
 import os
@@ -130,6 +136,72 @@ def fit_selfsim(cfg, params, steps, Mod):
     return params, prompts
 
 
+def resilience_section(cfg, params, reqs):
+    """Resilience probes -> the BENCH_serve.json `resilience` section that
+    `kernel_bench --smoke` gates on: a CLEAN run must record zero
+    degradation events (guards are bitwise-invisible bystanders), and the
+    two drills — logit poison, Pallas dispatch failure — must actually
+    fire (quarantine exactly one slot / fall back to the ref impl) while
+    every healthy request stays token-identical. Returns (section, ok)."""
+    from repro.serving import faults as F
+    from repro.serving.engine import ServingEngine
+    from repro.serving.faults import FaultPlan
+
+    def once(faults=None, **kw):
+        eng = ServingEngine(cfg, params, batch_slots=ARGS.slots,
+                            max_len=ARGS.max_len,
+                            scan_steps=ARGS.scan_steps,
+                            faults=faults if faults is not None
+                            else FaultPlan(), **kw)
+        return eng, {r.rid: r for r in eng.run(list(reqs))}
+
+    F.consume_events()
+    _, clean = once()
+    clean_events = [e["kind"] for e in F.consume_events()]
+    clean_ok = all(r.status == "ok" for r in clean.values())
+    print(f"[serve_bench] resilience/clean: all_ok={clean_ok}, "
+          f"degradation_events={len(clean_events)} (must be 0)")
+
+    qeng, chaos = once(FaultPlan(poison_logits=((0, 3, "nan"),)))
+    qevents = [e["kind"] for e in F.consume_events()]
+    healthy_identical = all(chaos[i].tokens == clean[i].tokens
+                            for i in clean if chaos[i].status == "ok")
+    print(f"[serve_bench] resilience/quarantine drill: "
+          f"quarantined={qeng.stats['quarantined']}, healthy bitwise "
+          f"identical={healthy_identical}")
+
+    try:
+        feng, fb = once(FaultPlan(fail_pallas_dispatch=True),
+                        decode_impl="pallas")
+    finally:
+        F.clear_kernel_failure()
+    fevents = [e["kind"] for e in F.consume_events()]
+    fb_ok = all(r.status == "ok" for r in fb.values())
+    fb_identical = all(fb[i].tokens == clean[i].tokens for i in clean)
+    print(f"[serve_bench] resilience/pallas-failure drill: "
+          f"kernel_fallbacks={feng.stats['kernel_fallbacks']}, impl now "
+          f"{feng.decode_impl!r}, all ok={fb_ok}, tokens identical to ref "
+          f"engine={fb_identical}")
+
+    section = {
+        "clean": {"events": len(clean_events), "all_ok": bool(clean_ok)},
+        "quarantine_drill": {
+            "quarantined": int(qeng.stats["quarantined"]),
+            "healthy_bitwise_identical": bool(healthy_identical),
+            "events": qevents},
+        "pallas_fallback_drill": {
+            "kernel_fallbacks": int(feng.stats["kernel_fallbacks"]),
+            "all_ok": bool(fb_ok),
+            "identical_to_ref": bool(fb_identical),
+            "events": fevents},
+    }
+    ok = (clean_ok and not clean_events
+          and qeng.stats["quarantined"] == 1 and healthy_identical
+          and feng.stats["kernel_fallbacks"] == 1 and fb_ok
+          and fb_identical)
+    return section, ok
+
+
 def main():
     global ARGS
     ap = argparse.ArgumentParser()
@@ -159,6 +231,11 @@ def main():
                     help="timing repetitions (median) for the "
                          "speculative/sequential comparison")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--resilience-only", action="store_true",
+                    help="run just the resilience probes and MERGE the "
+                         "`resilience` section into an existing --out "
+                         "artifact (the section kernel_bench --smoke "
+                         "gates on)")
     ARGS = ap.parse_args()
 
     mesh_dims = (tuple(int(x) for x in ARGS.mesh.split("x"))
@@ -183,6 +260,23 @@ def main():
     reqs = [Request(rid=i, prompt=rng.randint(
         0, cfg.vocab_size, (ARGS.prompt_len,)).astype(np.int32),
         max_new_tokens=ARGS.new_tokens) for i in range(ARGS.requests)]
+
+    if ARGS.resilience_only:
+        import json
+
+        section, res_ok = resilience_section(cfg, params, reqs)
+        existing = {}
+        if os.path.exists(ARGS.out):
+            with open(ARGS.out) as f:
+                existing = json.load(f)
+        existing["resilience"] = section
+        from benchmarks.common import write_json
+        write_json(ARGS.out, existing)
+        if not res_ok:
+            print("[serve_bench] FAIL: resilience probes (clean-run "
+                  "events or a drill that did not fire)", file=sys.stderr)
+            sys.exit(1)
+        return
 
     base, base_tps, _ = run_mode(cfg, params, reqs, scan_steps=1,
                                  batch_prefill=False, max_len=ARGS.max_len,
@@ -342,6 +436,7 @@ def main():
     payload["ring_cache"] = {"context": ctx, "ring_bytes": ring,
                              "dense_bytes": dn,
                              "ratio": round(dn / max(ring, 1), 1)}
+    payload["resilience"], res_ok = resilience_section(cfg, params, reqs)
     from benchmarks.common import write_json
     write_json(ARGS.out, payload)
     if not same:
@@ -359,6 +454,10 @@ def main():
     if not spec_ok:
         print("[serve_bench] FAIL: speculative decode below the 1.3x bar "
               "or not token-identical", file=sys.stderr)
+        sys.exit(1)
+    if not res_ok:
+        print("[serve_bench] FAIL: resilience probes (clean-run events "
+              "or a drill that did not fire)", file=sys.stderr)
         sys.exit(1)
 
 

@@ -361,6 +361,12 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
             tags=base))
 
     hot = base | {"decode_hot_path"}
+    # the scan signatures carry the resilience state: a (slots,) bool
+    # poisoned flag always, plus the fault-injection countdown vector when
+    # the engine's FaultPlan compiles logit faults in — tracing the guarded
+    # (and, for chaos engines, injected) programs is how the baseline pins
+    # "guards add zero collectives / host syncs" to the hot path
+    fin = ((sds((slots,)),) if c.faults.has_logit_faults else ())
     for n in scan_lens:
         if engine.speculative:
             drafter = c.drafter
@@ -371,7 +377,7 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
                       sds((slots,), jnp.bool_), sds((slots,)),
                       sds((slots,), jnp.float32), sds((), jnp.bool_),
                       key_sds, sds((slots, drafter.history)),
-                      sds((slots,))),
+                      sds((slots,)), sds((slots,), jnp.bool_)) + fin,
                 carries=(1,), tags=hot))
         else:
             points.append(EntryPoint(
@@ -380,6 +386,6 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
                 args=(params_sds, caches_sds(slots), sds((slots,)),
                       sds((slots,), jnp.bool_), sds((slots,)),
                       sds((slots,), jnp.float32), sds((), jnp.bool_),
-                      key_sds),
+                      key_sds, sds((slots,), jnp.bool_)) + fin,
                 carries=(1,), tags=hot))
     return points

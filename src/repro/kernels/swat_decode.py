@@ -44,6 +44,18 @@ from repro.kernels.swat_attention import LANES, NEG_INF
 
 logger = logging.getLogger(__name__)
 _PAD_WARNED: set = set()
+_FORCE_FAIL = False
+
+
+def set_force_fail(enabled: bool) -> None:
+    """Arm/disarm the simulated dispatch failure: while armed, every
+    `swat_decode` call raises `KernelDispatchError` at entry — the serving
+    engine's graceful-degradation ladder catches it and falls back to the
+    ref decode impl. Trace-time, so an armed scan compile fails before any
+    donated buffer is consumed (retrying with the ref impl is safe).
+    Module-global: the fault harness (`serving.faults`) manages it."""
+    global _FORCE_FAIL
+    _FORCE_FAIL = enabled
 _PAD_EVENTS: list = []
 
 
@@ -235,6 +247,10 @@ def swat_decode(q, k_cache, v_cache, pos, *,
     block adapts to W (`decode_block_kv`) so ring capacities that aren't a
     multiple of the default block never jnp.pad — the pad is a full cache
     COPY per token per layer, dwarfing the attention itself."""
+    if _FORCE_FAIL:
+        from repro.serving.faults import KernelDispatchError
+        raise KernelDispatchError(
+            "injected pallas dispatch failure (set_force_fail armed)")
     b, hq, t, d = q.shape
     _, hkv, w, _ = k_cache.shape
     group = hq // hkv

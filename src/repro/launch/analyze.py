@@ -72,10 +72,20 @@ def main():
         if label == "tp_2x2":
             return ServingEngine(dense, params, batch_slots=2, max_len=128,
                                  scan_steps=4, mesh=parse_mesh("2x2"))
+        if label == "chaos_4x1":
+            # the fault-injected program on the strictest topology: logit
+            # poison compiled into a slot-parallel decode scan must STILL
+            # be collective-free and host-sync-free (the injection is one
+            # masked row select + a countdown carry, all slot-local)
+            from repro.serving.faults import FaultPlan
+            return ServingEngine(
+                dense, params, batch_slots=4, max_len=128, scan_steps=4,
+                mesh=parse_mesh("4x1"),
+                faults=FaultPlan(poison_logits=((0, 3, "nan"),)))
         raise SystemExit(f"unknown engine label: {label}")
 
     matrix = ["single", "swat_pallas", "spec_k2", "slot_parallel_4x1",
-              "tp_2x2"]
+              "tp_2x2", "chaos_4x1"]
     if args.engines:
         matrix = [x.strip() for x in args.engines.split(",") if x.strip()]
 

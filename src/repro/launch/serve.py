@@ -15,6 +15,13 @@ device count FIRST, e.g.:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --smoke --mesh 2x2
+
+Resilience drills (see serving/README.md "Resilience & fault injection"):
+`--chaos-poison-slot 0` NaN-poisons a slot mid-decode and prints the
+quarantine event; `--chaos-fail-pallas --decode-impl pallas` forces a
+kernel dispatch failure and prints the ref-impl fallback. Per-request
+`--deadline`, `--max-pending` backpressure and `--max-prompt-len`
+rejection surface as per-status counts in the summary line.
 """
 import argparse
 import time
@@ -63,6 +70,30 @@ def main():
                          "default: single-device")
     ap.add_argument("--profile", choices=("tp", "cp", "fsdp"), default="tp",
                     help="param sharding profile for --mesh")
+    # ----------------------------------------------- resilience knobs ----
+    ap.add_argument("--max-prompt-len", type=int, default=0,
+                    help="reject (status 'rejected') prompts longer than "
+                         "this instead of serving them (0 = no limit)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="bounded-queue backpressure: reject requests "
+                         "beyond this many queued (0 = unbounded)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds from submission "
+                         "(0 = none); expired requests finalize as "
+                         "status 'deadline' with whatever they emitted")
+    ap.add_argument("--spec-min-acceptance", type=float, default=0.0,
+                    help="auto-disable speculative decode when windowed "
+                         "acceptance drops below this rate (0 = never)")
+    # ------------------------------------------------- chaos drills -----
+    ap.add_argument("--chaos-poison-slot", type=int, default=None,
+                    metavar="SLOT",
+                    help="fault drill: poison SLOT's logits with NaN at "
+                         "--chaos-poison-step and watch it quarantine")
+    ap.add_argument("--chaos-poison-step", type=int, default=3)
+    ap.add_argument("--chaos-fail-pallas", action="store_true",
+                    help="fault drill: make the pallas decode kernel "
+                         "fail dispatch; the engine must fall back to "
+                         "the reference impl and finish the batch")
     args = ap.parse_args()
 
     import jax
@@ -70,14 +101,21 @@ def main():
     from repro.configs import get_config, get_smoke_config, with_swat
     from repro.core import model as Mod
     from repro.launch.mesh import parse_mesh
+    from repro.serving import faults as F
     from repro.serving.drafter import NGramDrafter
     from repro.serving.engine import Request, ServingEngine, ring_cache_bytes
+    from repro.serving.faults import FaultPlan
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.swat:
         cfg = with_swat(cfg, window=args.window, num_global=4)
     mesh = parse_mesh(args.mesh) if args.mesh else None
     params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+    plan = FaultPlan(
+        poison_logits=(((args.chaos_poison_slot, args.chaos_poison_step,
+                         "nan"),)
+                       if args.chaos_poison_slot is not None else ()),
+        fail_pallas_dispatch=args.chaos_fail_pallas)
     engine = ServingEngine(
         cfg, params, batch_slots=args.slots, max_len=args.max_len,
         scan_steps=args.scan_steps, batch_prefill=args.batch_prefill,
@@ -88,14 +126,22 @@ def main():
         speculative=args.speculative,
         draft=NGramDrafter(max_ngram=args.draft_ngram,
                            history=args.draft_history),
-        mesh=mesh, profile=args.profile)
+        mesh=mesh, profile=args.profile,
+        faults=plan,
+        max_prompt_len=args.max_prompt_len or None,
+        max_pending=args.max_pending or None,
+        spec_min_acceptance=args.spec_min_acceptance)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(
         0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
-        max_new_tokens=args.new_tokens, temperature=args.temperature)
+        max_new_tokens=args.new_tokens, temperature=args.temperature,
+        deadline=args.deadline or None)
         for i in range(args.requests)]
     t0 = time.time()
-    results = engine.run(reqs)
+    try:
+        results = engine.run(reqs)
+    finally:
+        F.clear_kernel_failure()
     dt = time.time() - t0
     n = sum(len(r.tokens) for r in results)
     mdesc = "single-device" if mesh is None else (
@@ -110,6 +156,19 @@ def main():
           f"prefill_chunk={args.prefill_chunk}, {mdesc}{spec})")
     print(f"[serve] cache bytes @max_len: "
           f"{ring_cache_bytes(cfg, args.slots, args.max_len) / 1e6:.1f}MB")
+    by_status = {}
+    for r in results:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    print("[serve] statuses: "
+          + ", ".join(f"{k}={v}" for k, v in sorted(by_status.items())))
+    for ev in F.consume_events():
+        kind = ev.pop("kind")
+        print(f"[serve] degradation event: {kind} "
+              + " ".join(f"{k}={v}" for k, v in sorted(ev.items())))
+    for r in results:
+        if r.status != "ok":
+            print(f"[serve]   rid {r.rid}: {r.status}"
+                  + (f" — {r.reason}" if r.reason else ""))
 
 
 if __name__ == "__main__":

@@ -108,6 +108,18 @@ class NGramDrafter:
         last = hist[:, h - 1][:, None]
         return jnp.where(has[:, None], drafts, last)
 
+    # ----------------------------------------------------------- sanitize --
+    @staticmethod
+    def sanitize(drafts, vocab_size: int):
+        """Clip drafts into [0, vocab). Proposals are *suggestions* — a
+        corrupted or buggy drafter must never crash the verify step or,
+        worse, exploit jax's out-of-bounds gather semantics (indices clamp
+        silently under jit) to smuggle a plausible-but-wrong embedding row
+        into the model. Clipped garbage simply fails verification: the
+        engine emits the model's own token and drops the drafts — the
+        fault-injection suite drives this with out-of-vocab proposals."""
+        return jnp.clip(jnp.asarray(drafts, jnp.int32), 0, vocab_size - 1)
+
     # ------------------------------------------------------------ observe --
     def observe(self, hist, count, tokens, num_emitted):
         """Append each slot's first `num_emitted` of `tokens` (B, T) to its

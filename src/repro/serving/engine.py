@@ -40,6 +40,8 @@ import collections
 import contextlib
 import dataclasses
 import functools
+import time
+import warnings
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -56,9 +58,21 @@ jax.config.update("jax_threefry_partitionable", True)
 
 from repro.core import model as Mod
 from repro.core.types import ModelConfig
+from repro.serving import faults as F
 from repro.serving import sampling
 from repro.serving.drafter import NGramDrafter, get_drafter
+from repro.serving.faults import FaultPlan
 from repro.serving.scheduler import PrefillPlan, Scheduler, normalize_prompt
+
+# the Result status taxonomy (see serving/README.md "Resilience"):
+#   ok        full budget served (or prompt-only request)
+#   rejected  never admitted: malformed/oversized prompt or queue overflow
+#   poisoned  quarantined mid-decode: non-finite logits in the slot's row;
+#             tokens holds everything emitted BEFORE the poison
+#   deadline  per-request deadline expired (partial tokens kept)
+#   failed    infrastructure failure after the slot's state was consumed
+#             (e.g. kernel dispatch died after cache donation)
+STATUSES = ("ok", "rejected", "poisoned", "deadline", "failed")
 
 
 @dataclasses.dataclass
@@ -67,17 +81,32 @@ class Request:
     prompt: np.ndarray           # any int spelling; normalized to (L,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    # seconds from run() submission; None = no deadline. Checked at block
+    # boundaries (the host-sync quantum), so expiry resolution is one
+    # decode block — an expired request finalizes with what it has.
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         # normalize ONCE at the boundary: a (1, L) / list-of-lists prompt
-        # used to len()-measure as 1 and crash (or mis-pad) at batch fill
-        self.prompt = normalize_prompt(self.prompt)
+        # used to len()-measure as 1 and crash (or mis-pad) at batch fill.
+        # A ragged prompt that cannot normalize is kept as-is: the
+        # scheduler rejects it per-request instead of raising here.
+        try:
+            self.prompt = normalize_prompt(self.prompt)
+        except (ValueError, TypeError):
+            pass
 
 
 @dataclasses.dataclass
 class Result:
     rid: int
     tokens: List[int]
+    status: str = "ok"           # one of STATUSES
+    reason: str = ""             # human-readable detail for status != ok
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
 
 class _Compiled:
@@ -107,7 +136,8 @@ class _Compiled:
     def __init__(self, cfg: ModelConfig, max_len: int, decode_impl: str,
                  top_k: int, mesh=None, profile: str = "tp",
                  tokens_per_step: int = 1, speculative: int = 0,
-                 draft: Optional[NGramDrafter] = None, donate: bool = True):
+                 draft: Optional[NGramDrafter] = None, donate: bool = True,
+                 faults: FaultPlan = FaultPlan()):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
         self.tokens_per_step = tokens_per_step
@@ -115,6 +145,10 @@ class _Compiled:
         self.speculative = speculative
         self.drafter = get_drafter(draft) if speculative else None
         self.donate = donate
+        # frozen/hashable like the drafter spec: a plan with logit faults
+        # compiles an extra countdown argument + one masked select into the
+        # scan body; the default plan compiles the production program
+        self.faults = faults
         self.mesh, self.profile = mesh, profile
         if mesh is not None:
             from repro.distributed import sharding as Sh
@@ -158,12 +192,14 @@ class _Compiled:
         vector left on the default device would need an implicit
         (disallowed) reshard onto the mesh."""
         veci = self.batch_sharding(self._sds((slots,)), slots)
-        sh = {"tok": veci, "budget": veci,
-              "active": self.batch_sharding(
-                  self._sds((slots,), jnp.bool_), slots),
+        vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
+        sh = {"tok": veci, "budget": veci, "active": vecb,
+              "poisoned": vecb,
               "temps": self.batch_sharding(
                   self._sds((slots,), jnp.float32), slots),
               "anyt": self._rep}
+        if self.faults.has_logit_faults:
+            sh["fin"] = veci
         if self.drafter is not None:
             sh["hist"] = self.batch_sharding(
                 self._sds((slots, self.drafter.history)), slots)
@@ -317,26 +353,64 @@ class _Compiled:
         cfg, impl, top_k = self.cfg, self.decode_impl, self.top_k
         lookahead = self.lookahead
         act = self._act_sharding(slots)
+        inject = self.faults.has_logit_faults
+        # poison value per slot: a NUMPY constant baked into the trace
+        # (eager jnp here would dispatch under the engine's transfer guard)
+        bad_val = (np.where(self.faults.inf_mask(slots),
+                            np.inf, np.nan).astype(np.float32)
+                   if inject else None)
 
-        def fn(params, caches, tok, active, budget, temps, anyt, key):
+        def run_scan(params, caches, tok, active, budget, temps, anyt, key,
+                     poisoned, fin):
             def body(carry, _):
-                caches, tok, active, budget, key = carry
+                caches, tok, active, budget, key, poisoned, fin = carry
                 logits, caches = Mod.decode_step(
                     params, cfg, {"tokens": tok[:, None]}, caches, impl=impl,
                     act_sharding=act, lookahead=lookahead)
+                lg = logits[:, 0]
+                if inject:
+                    # chaos countdown: when a slot's trigger step arrives,
+                    # its whole logits row becomes nan/inf — one masked
+                    # select, invisible to every other row
+                    lg = jnp.where((active & (fin == 0))[:, None],
+                                   bad_val[:, None], lg)
                 key, sub = jax.random.split(key)
-                nxt = sampling.sample(sub, logits[:, 0], temps, top_k,
+                nxt = sampling.sample(sub, lg, temps, top_k,
                                       any_sampling=anyt)
-                nxt = jnp.where(active, nxt, tok)
-                emitted = active
-                budget = budget - active.astype(jnp.int32)
-                active = active & (budget > 0)
-                return (caches, nxt, active, budget, key), (nxt, emitted)
+                # numerical guard: a non-finite row is QUARANTINED — not
+                # emitted, budget untouched, slot deactivated for the host
+                # to finalize as status "poisoned". Every op here is
+                # row-wise and the RNG split count is unchanged, so on a
+                # clean run (bad == False) the program's healthy-slot
+                # tokens are bitwise the unguarded engine's.
+                bad = active & ~sampling.finite_rows(lg)
+                ok = active & ~bad
+                nxt = jnp.where(ok, nxt, tok)
+                emitted = ok
+                budget = budget - ok.astype(jnp.int32)
+                poisoned = poisoned | bad
+                active = ok & (budget > 0)
+                if inject:
+                    fin = fin - ok.astype(jnp.int32)
+                return ((caches, nxt, active, budget, key, poisoned, fin),
+                        (nxt, emitted))
 
             carry, (toks, emit) = jax.lax.scan(
-                body, (caches, tok, active, budget, key), None, length=n)
-            caches, tok, active, budget, key = carry
-            return caches, tok, active, budget, key, toks, emit
+                body, (caches, tok, active, budget, key, poisoned, fin),
+                None, length=n)
+            caches, tok, active, budget, key, poisoned, fin = carry
+            return (caches, tok, active, budget, key, toks, emit, poisoned
+                    ) + ((fin,) if inject else ())
+
+        if inject:
+            fn = run_scan
+        else:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   poisoned):
+                # fin rides the carry as an empty pytree (None) so the
+                # clean program has no countdown state at all
+                return run_scan(params, caches, tok, active, budget, temps,
+                                anyt, key, poisoned, None)
 
         # donate the ring caches: the decode block's only multi-MB carry.
         # Un-donated, XLA materializes a full copy of every K/V ring per
@@ -351,11 +425,13 @@ class _Compiled:
         vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
         vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
         blk = self.batch_sharding(self._sds((n, slots)), slots, slot_dim=1)
+        fin_in = (veci,) if inject else ()
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
-                          vecf, self._rep, self._rep),
-            out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk),
+                          vecf, self._rep, self._rep, vecb) + fin_in,
+            out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk,
+                           vecb) + fin_in,
             donate_argnums=don)
 
     # ------------------------------------------------------- speculative --
@@ -405,9 +481,15 @@ class _Compiled:
         assert self.lookahead >= k, (self.lookahead, k)
         drafter = self.drafter
         act = self._act_sharding(slots, t)
+        inject = self.faults.has_logit_faults
+        bad_val = (np.where(self.faults.inf_mask(slots),
+                            np.inf, np.nan).astype(np.float32)
+                   if inject else None)
+        corrupt = (self.faults.draft_mask(slots)
+                   if self.faults.corrupt_draft_slots else None)
 
-        def fn(params, caches, tok, active, budget, temps, anyt, key, hist,
-               hcnt):
+        def run_spec(params, caches, tok, active, budget, temps, anyt, key,
+                     hist, hcnt, poisoned, fin):
             toks0 = jnp.zeros((n, slots, t), jnp.int32)
             emit0 = jnp.zeros((n, slots, t), jnp.bool_)
             active0 = active
@@ -421,16 +503,38 @@ class _Compiled:
                 # the scheduler, which refills and redispatches. The
                 # sequential scan never needs this: its block length
                 # min(budgets) already ends exactly at first retirement.
+                # Quarantined slots flip active too, so poison exits here.
                 return (i < n) & jnp.all(active == active0)
 
             def body(carry):
-                (i, caches, tok, active, budget, key, hist, hcnt,
-                 toks_buf, emit_buf) = carry
+                (i, caches, tok, active, budget, key, hist, hcnt, poisoned,
+                 fin, toks_buf, emit_buf) = carry
                 drafts = drafter.propose(hist, hcnt, k)
+                if corrupt is not None:
+                    # chaos: replace the slot's proposals with out-of-vocab
+                    # garbage — sanitize below must keep it harmless
+                    drafts = jnp.where(corrupt[:, None],
+                                       jnp.int32(cfg.vocab_size + 1337),
+                                       drafts)
+                # proposals are suggestions, never trusted: clip into the
+                # vocab so a corrupt drafter can't exploit OOB-gather
+                # clamping (garbage fails verification instead)
+                drafts = drafter.sanitize(drafts, cfg.vocab_size)
                 x = jnp.concatenate([tok[:, None], drafts], axis=1)
                 logits, caches = Mod.decode_step(
                     params, cfg, {"tokens": x}, caches, impl=impl,
                     act_sharding=act, lookahead=k)
+                if inject:
+                    # a spec step verifies a window of T positions; poison
+                    # exactly the position the countdown lands on (window
+                    # position fin = token index tokens_done + fin), so a
+                    # poisoned request keeps exactly target_idx tokens on
+                    # every engine flavor — sequential and speculative agree
+                    pos = jnp.arange(t, dtype=jnp.int32)[None, :]
+                    hitpos = ((active & (fin >= 0) & (fin < t))[:, None]
+                              & (pos == fin[:, None]))
+                    logits = jnp.where(hitpos[:, :, None],
+                                       bad_val[:, None, None], logits)
                 key, sub = jax.random.split(key)
                 # one batched sample over the T verify positions (vmap is
                 # bitwise the per-j loop: same fold_in(sub, j) keys, same
@@ -442,9 +546,28 @@ class _Compiled:
                     lambda kj, lj: sampling.sample(kj, lj, temps, top_k,
                                                    any_sampling=anyt),
                     in_axes=(0, 1), out_axes=1)(subs, logits)  # (B, T)
+                # numerical guard over every verify position. A slot is
+                # quarantined only when a non-finite position would actually
+                # be CONSUMED (its index < the acceptance-gated emission
+                # count): it emits the verified-clean prefix strictly before
+                # the first bad position, then deactivates for host
+                # quarantine. A bad position beyond acceptance was never
+                # going to be emitted — the slot stays live and the guard
+                # re-checks next step. Row/position-wise only, so healthy
+                # slots are bitwise the unguarded program.
+                finpos = jnp.all(jnp.isfinite(logits), axis=-1)   # (B, T)
+                first_bad = jnp.where(
+                    jnp.all(finpos, axis=1), jnp.int32(t),
+                    jnp.argmin(finpos.astype(jnp.int32), axis=1)
+                    .astype(jnp.int32))
                 match = (drafts == ver[:, :k]).astype(jnp.int32)
                 acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
-                e = jnp.where(active, jnp.minimum(acc + 1, budget), 0)
+                e_clean = jnp.minimum(acc + 1, budget)
+                bad = active & (first_bad < e_clean)
+                ok = active & ~bad
+                e = jnp.where(active,
+                              jnp.where(bad, first_bad, e_clean),
+                              0)
                 caches = jax.tree.map(
                     lambda c: ({**c, "step": c["step"] - t
                                 + e[None, :].astype(c["step"].dtype)}
@@ -453,20 +576,32 @@ class _Compiled:
                     and "step" in c)
                 newlast = jnp.take_along_axis(
                     ver, jnp.maximum(e - 1, 0)[:, None], axis=1)[:, 0]
-                tok = jnp.where(active, newlast, tok)
+                tok = jnp.where(ok, newlast, tok)
                 hist, hcnt = drafter.observe(hist, hcnt, ver, e)
                 emitted = jnp.arange(t, dtype=jnp.int32)[None, :] < e[:, None]
                 budget = budget - e
-                active = active & (budget > 0)
+                poisoned = poisoned | bad
+                active = ok & (budget > 0)
+                if inject:
+                    fin = fin - e
                 return (i + 1, caches, tok, active, budget, key, hist, hcnt,
+                        poisoned, fin,
                         toks_buf.at[i].set(ver), emit_buf.at[i].set(emitted))
 
-            (steps, caches, tok, active, budget, key, hist, hcnt,
-             toks, emit) = jax.lax.while_loop(
+            (steps, caches, tok, active, budget, key, hist, hcnt, poisoned,
+             fin, toks, emit) = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), caches, tok, active, budget, key,
-                             hist, hcnt, toks0, emit0))
+                             hist, hcnt, poisoned, fin, toks0, emit0))
             return (caches, tok, active, budget, key, hist, hcnt, toks,
-                    emit, steps)
+                    emit, steps, poisoned) + ((fin,) if inject else ())
+
+        if inject:
+            fn = run_spec
+        else:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   hist, hcnt, poisoned):
+                return run_spec(params, caches, tok, active, budget, temps,
+                                anyt, key, hist, hcnt, poisoned, None)
 
         don = self._donate(1)            # ring caches: see _make_scan
         if self.mesh is None:
@@ -479,12 +614,14 @@ class _Compiled:
             self._sds((slots, drafter.history)), slots)
         blk = self.batch_sharding(
             self._sds((n, slots, t)), slots, slot_dim=1)
+        fin_in = (veci,) if inject else ()
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
-                          vecf, self._rep, self._rep, hist_sh, veci),
+                          vecf, self._rep, self._rep, hist_sh, veci,
+                          vecb) + fin_in,
             out_shardings=(cache_sh, veci, vecb, veci, self._rep, hist_sh,
-                           veci, blk, blk, self._rep),
+                           veci, blk, blk, self._rep, vecb) + fin_in,
             donate_argnums=don)
 
 
@@ -493,9 +630,10 @@ def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
                   top_k: int, mesh=None, profile: str = "tp",
                   tokens_per_step: int = 1, speculative: int = 0,
                   draft: Optional[NGramDrafter] = None,
-                  donate: bool = True) -> _Compiled:
+                  donate: bool = True,
+                  faults: FaultPlan = FaultPlan()) -> _Compiled:
     return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
-                     tokens_per_step, speculative, draft, donate)
+                     tokens_per_step, speculative, draft, donate, faults)
 
 
 class ServingEngine:
@@ -506,7 +644,14 @@ class ServingEngine:
                  top_k: int = 0, decode_impl: str = "ref",
                  mesh=None, profile: str = "tp", tokens_per_step: int = 1,
                  speculative: int = 0, draft: Optional[NGramDrafter] = None,
-                 donate: bool = True, transfer_guard: bool = True):
+                 donate: bool = True, transfer_guard: bool = True,
+                 faults: Optional[FaultPlan] = None,
+                 max_prompt_len: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 spec_min_acceptance: float = 0.0,
+                 spec_acceptance_window: int = 4,
+                 spec_retry_blocks: int = 8,
+                 spec_resume_acceptance: Optional[float] = None):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
@@ -548,7 +693,31 @@ class ServingEngine:
         transfer that sneaks into the hot loop raises instead of silently
         syncing every block (the scheduled host syncs — staging admitted
         slots, draining block outputs — are explicit transfers and stay
-        legal)."""
+        legal).
+
+        faults: a `serving.faults.FaultPlan` — deterministic chaos layer.
+        Part of the compile identity: logit faults compile a countdown
+        vector + one masked select into the scan body; the default plan
+        compiles the production program. The numerical GUARDS (quarantine
+        of non-finite rows) are always compiled in — on a clean run they
+        are bitwise-invisible.
+
+        max_prompt_len: reject (status "rejected") prompts longer than
+        this instead of admitting them; None (default) serves long prompts
+        via the ring exactly as before.
+        max_pending: bounded-queue backpressure — `run()` rejects requests
+        beyond this queue depth (status "rejected", reason "queue
+        overflow") instead of buffering unboundedly under overload.
+
+        spec_min_acceptance: speculative-decode auto-disable — when the
+        windowed draft acceptance rate (over `spec_acceptance_window`
+        spec blocks) drops below this, the engine decodes sequentially
+        (same tokens for greedy requests, no wasted verify lanes). After
+        `spec_retry_blocks` sequential blocks it probes with one spec
+        block and re-enables only if that block's acceptance reaches
+        `spec_resume_acceptance` (default: same threshold) — the
+        hysteresis that stops flapping. 0.0 (default) disables the
+        ladder."""
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -567,18 +736,37 @@ class ServingEngine:
         self.tokens_per_step = max(1, tokens_per_step, self.speculative + 1)
         self.mesh, self.profile = mesh, profile
         self.transfer_guard = transfer_guard
+        self.faults = faults if faults is not None else FaultPlan()
+        if self.faults.fail_pallas_dispatch:
+            F.install_kernel_failure()
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
                                 profile, self.tokens_per_step,
                                 self.speculative,
                                 get_drafter(draft) if self.speculative
-                                else None, donate)
+                                else None, donate, self.faults)
         self.drafter = self._c.drafter
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
         self.scheduler = Scheduler(
             max_prefill_tokens=max_prefill_tokens, pad_to=pad_to,
-            slot_quantum=self._c.slot_quantum(batch_slots))
+            slot_quantum=self._c.slot_quantum(batch_slots),
+            max_prompt_len=max_prompt_len, vocab_size=cfg.vocab_size)
+        self.max_pending = max_pending
+        self.spec_min_acceptance = float(spec_min_acceptance)
+        self.spec_resume_acceptance = float(
+            spec_min_acceptance if spec_resume_acceptance is None
+            else spec_resume_acceptance)
+        self.spec_retry_blocks = spec_retry_blocks
+        self._acc_window: Deque[Tuple[int, int]] = collections.deque(
+            maxlen=max(1, spec_acceptance_window))
+        self._spec_off = False            # degradation-ladder state
+        self._blocks_since_spec = 0
+        self._hist_stale = False          # drafter history vs slot_out
+        self._fallback_warned = False
+        self._cache_poison_applied: set = set()
+        self._faults_fired: set = set()   # slots whose logit fault fired
+        self._run_t0: Optional[float] = None
 
         self.caches = self._c.fresh_caches(batch_slots)
         self.slot_free = [True] * batch_slots
@@ -598,14 +786,85 @@ class ServingEngine:
         # spec_steps counts executed verify dispatches, draft_proposed /
         # draft_accepted count drafts offered vs kept (acceptance_rate),
         # tokens_emitted counts every token produced by decode steps.
+        # The resilience counters mirror the degradation-event bus
+        # (faults.consume_events) so a bench/test can assert "nothing
+        # degraded" from either side.
         self.stats = {"spec_steps": 0, "draft_proposed": 0,
-                      "draft_accepted": 0, "tokens_emitted": 0}
+                      "draft_accepted": 0, "tokens_emitted": 0,
+                      "quarantined": 0, "rejected": 0, "deadline": 0,
+                      "failed": 0, "kernel_fallbacks": 0,
+                      "spec_autodisable": 0, "spec_resume": 0}
 
     @property
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the verifier kept."""
         p = self.stats["draft_proposed"]
         return self.stats["draft_accepted"] / p if p else 0.0
+
+    # --------------------------------------------------------- resilience --
+    _STATUS_COUNTER = {"rejected": "rejected", "poisoned": "quarantined",
+                       "deadline": "deadline", "failed": "failed"}
+    _STATUS_EVENT = {"rejected": "request_rejected",
+                     "poisoned": "slot_quarantined",
+                     "deadline": "deadline_expired",
+                     "failed": "request_failed"}
+
+    def _finish(self, rid: int, tokens: List[int], status: str,
+                reason: str = "") -> Result:
+        """Finalize one request into self._completed (the ONLY result
+        store — run() drains it, so a mid-loop exception never loses
+        finished work) and mirror non-ok statuses to stats + event bus."""
+        res = Result(rid, tokens, status=status, reason=reason)
+        self._completed.append(res)
+        if status != "ok":
+            self.stats[self._STATUS_COUNTER[status]] += 1
+            F.record_event(self._STATUS_EVENT[status], rid=rid,
+                           reason=reason)
+        return res
+
+    def take_completed(self) -> List[Result]:
+        """Drain finished Results (rid order). After an exception escaped
+        `run()`, this recovers everything that finished before it."""
+        out, self._completed = self._completed, []
+        return sorted(out, key=lambda r: r.rid)
+
+    def _drain_rejections(self):
+        for req, reason in self.scheduler.take_rejected():
+            self._finish(req.rid, [], "rejected", reason)
+
+    def _free_slot(self, s: int):
+        self.slot_free[s] = True
+        self.slot_req[s] = None
+        self.slot_budget[s] = 0
+
+    def _expire_deadlines(self, pending: Deque[Request]):
+        """Finalize requests whose deadline (seconds since run()
+        submission) passed — queued ones with no tokens, live ones with
+        their partial output. Block-boundary resolution."""
+        if self._run_t0 is None:
+            return
+        elapsed = time.monotonic() - self._run_t0
+        if pending and any(r.deadline is not None for r in pending):
+            keep = []
+            for r in pending:
+                if r.deadline is not None and elapsed > r.deadline:
+                    self._finish(r.rid, [], "deadline",
+                                 f"deadline {r.deadline}s expired in queue")
+                else:
+                    keep.append(r)
+            pending.clear()
+            pending.extend(keep)
+        freed = False
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if (req is not None and req.deadline is not None
+                    and elapsed > req.deadline):
+                self._finish(req.rid, self.slot_out[s], "deadline",
+                             f"deadline {req.deadline}s expired mid-decode")
+                self._free_slot(s)
+                freed = True
+        if freed:
+            self._dev = None      # host slot state changed: restage
 
     # ------------------------------------------------------------ prefill --
     def _prefill_into(self, plan: PrefillPlan, slots: List[int]):
@@ -646,7 +905,7 @@ class ServingEngine:
                 self.slot_hcnt[s] = cnt
             budget = req.max_new_tokens - 1
             if budget <= 0:
-                self._completed.append(Result(req.rid, self.slot_out[s]))
+                self._finish(req.rid, self.slot_out[s], "ok")
                 self.slot_free[s] = True
                 self.slot_req[s] = None
                 self.slot_budget[s] = 0
@@ -666,15 +925,134 @@ class ServingEngine:
             if plan is None:
                 break
             self._prefill_into(plan, free[:len(plan.requests)])
+        # requests the scheduler refused (empty/oversized/out-of-vocab
+        # prompts) finalize as status "rejected" — they never crash a batch
+        self._drain_rejections()
 
     # ------------------------------------------------------------- decode --
+    def _spec_mode(self) -> Tuple[bool, bool]:
+        """(run speculatively this block?, is this a hysteresis probe?)
+        under the acceptance ladder. Auto-disabled engines decode
+        sequentially (same greedy tokens, no wasted verify lanes) and
+        periodically probe one spec block to earn speculation back."""
+        if not self.speculative:
+            return False, False
+        if not self._spec_off:
+            return True, False
+        self._blocks_since_spec += 1
+        if self.spec_retry_blocks and \
+                self._blocks_since_spec >= self.spec_retry_blocks:
+            return True, True
+        return False, False
+
+    def _spec_ladder_update(self, prop: int, acc: int, probe: bool):
+        """Feed one spec block's acceptance into the ladder."""
+        if self.spec_min_acceptance <= 0:
+            return
+        if probe:
+            rate = acc / prop if prop else 0.0
+            if rate >= self.spec_resume_acceptance:
+                self._spec_off = False
+                self.stats["spec_resume"] += 1
+                F.record_event("spec_resume", rate=rate)
+                self._acc_window.clear()
+            else:
+                self._blocks_since_spec = 0    # stay off; probe again later
+            return
+        self._acc_window.append((prop, acc))
+        wp = sum(p for p, _ in self._acc_window)
+        wa = sum(a for _, a in self._acc_window)
+        if wp >= 2 * self.speculative and wa / wp < self.spec_min_acceptance:
+            self._spec_off = True
+            self._blocks_since_spec = 0
+            self._acc_window.clear()
+            self.stats["spec_autodisable"] += 1
+            F.record_event("spec_autodisable", rate=wa / wp)
+
+    def _reseed_history(self, live: List[int]):
+        """Sequential-fallback blocks emit tokens the drafter never
+        observed; rebuild each live slot's history (prompt + full output)
+        before the next speculative block."""
+        hist = np.array(self.slot_hist, np.int32)
+        hcnt = np.array(self.slot_hcnt, np.int32)
+        for s in live:
+            row, cnt = self.drafter.seed_row(
+                np.concatenate([self.slot_req[s].prompt, self.slot_out[s]]))
+            hist[s], hcnt[s] = row, cnt
+        self.slot_hist, self.slot_hcnt = hist, hcnt
+        self._hist_stale = False
+        self._dev = None
+
+    def _apply_cache_poisons(self, live: List[int]):
+        """Chaos: smear NaN over a slot's ring K caches once it has
+        emitted its trigger count — corruption the guard didn't see born.
+        The next attention read propagates it into that slot's logits,
+        where the in-scan guard quarantines it."""
+        if not self.faults.poison_cache:
+            return
+        tokens_done = [len(self.slot_out[s]) if not self.slot_free[s] else -1
+                       for s in range(self.slots)]
+        for s in self.faults.cache_poisons_due(
+                self.slots, tokens_done, self._cache_poison_applied):
+            self._cache_poison_applied.add(s)
+            self.caches = _poison_slot_k(self.caches, s)
+            F.record_event("cache_poisoned", slot=s)
+
+    def _kernel_fallback(self, err, n: int) -> List[Result]:
+        """Rung one of the degradation ladder: the Pallas decode kernel
+        failed to dispatch — swap this engine to the reference impl (for
+        good: `_get_compiled` keys by impl, so this is a rebuild, not a
+        recompile storm) and retry the block. The injected failure raises
+        at trace time, BEFORE the donated ring caches are consumed, so the
+        retry serves every in-flight slot untouched; if a mid-execution
+        failure DID consume the donation, the slots cannot be resumed and
+        finalize as status "failed" instead of silently garbage."""
+        self.stats["kernel_fallbacks"] += 1
+        F.record_event("pallas_fallback", error=str(err))
+        if not self._fallback_warned:
+            self._fallback_warned = True
+            warnings.warn(
+                "pallas decode dispatch failed; this engine now decodes "
+                f"with the reference impl ({err})",
+                RuntimeWarning, stacklevel=3)
+        self.decode_impl = "ref"
+        self._c = _get_compiled(self.cfg, self.max_len, "ref", self.top_k,
+                                self.mesh, self.profile,
+                                self.tokens_per_step, self.speculative,
+                                self.drafter, self._c.donate, self.faults)
+        deleted = any(getattr(l, "is_deleted", lambda: False)()
+                      for l in jax.tree.leaves(self.caches))
+        if not deleted:
+            return self._decode_block(n)
+        done = []
+        for s in range(self.slots):
+            if not self.slot_free[s]:
+                done.append(self._finish(
+                    self.slot_req[s].rid, self.slot_out[s], "failed",
+                    "kernel dispatch failed after cache donation"))
+                self._free_slot(s)
+        self.caches = self._c.fresh_caches(self.slots)
+        self._dev = None
+        return done
+
     def _decode_block(self, n: int) -> List[Result]:
         """Run n decode steps on-device (one host sync), then retire
         finished slots. Speculative engines run n draft/verify/accept
-        steps instead, each emitting 1..speculative+1 tokens per slot."""
+        steps instead, each emitting 1..speculative+1 tokens per slot.
+
+        Resilience: the compiled scan body carries a per-slot `poisoned`
+        flag — a slot whose logits go non-finite stops emitting on device
+        and is QUARANTINED here (finalized as status "poisoned", slot
+        freed, every other slot untouched); a Pallas dispatch failure
+        falls back to the ref impl (`_kernel_fallback`)."""
         live = [s for s in range(self.slots) if not self.slot_free[s]]
         if not live:
             return []
+        self._apply_cache_poisons(live)
+        use_spec, probe = self._spec_mode()
+        if use_spec and self._hist_stale:
+            self._reseed_history(live)
+        inject = self._c.faults.has_logit_faults
         if self._dev is None:
             # (re)stage the per-slot vectors on device. Admission is the
             # only writer outside a decode block, so between consecutive
@@ -692,7 +1070,16 @@ class ServingEngine:
                 # reducing the slot-sharded temps on device would cost a
                 # pred[] all-reduce in every scan step (sampling.sample)
                 anyt=jnp.asarray(bool(np.any((self.slot_temp > 0)
-                                             & active))))
+                                             & active))),
+                # freed slots never re-enter `live` without a restage, so
+                # zeros here cover every slot the scan may still touch
+                poisoned=jnp.zeros((self.slots,), jnp.bool_))
+            if inject:
+                self._dev["fin"] = jnp.asarray(self.faults.logit_countdown(
+                    self.slots,
+                    [len(self.slot_out[s]) if not self.slot_free[s] else 0
+                     for s in range(self.slots)],
+                    fired=self._faults_fired))
             if self.speculative:
                 self._dev["hist"] = jnp.asarray(self.slot_hist)
                 self._dev["hcnt"] = jnp.asarray(self.slot_hcnt)
@@ -716,43 +1103,70 @@ class ServingEngine:
         # legal under "disallow".
         guard = (jax.transfer_guard("disallow") if self.transfer_guard
                  else contextlib.nullcontext())
-        if self.speculative:
-            with guard:
+        extra = (dev["fin"],) if inject else ()
+        try:
+            if use_spec:
+                with guard:
+                    outs = self._c.spec_scan(n, self.slots)(
+                        self.params, self.caches, dev["tok"], dev["active"],
+                        dev["budget"], dev["temps"], dev["anyt"], self.key,
+                        dev["hist"], dev["hcnt"], dev["poisoned"], *extra)
                 (self.caches, tok, active_out, budget, self.key, hist, hcnt,
-                 toks, emit, steps) = self._c.spec_scan(n, self.slots)(
-                    self.params, self.caches, dev["tok"], dev["active"],
-                    dev["budget"], dev["temps"], dev["anyt"], self.key,
-                    dev["hist"], dev["hcnt"])
-            # drafter state stays device-resident too; _prefill_into
-            # materializes to numpy only when it needs to seed a row
-            self.slot_hist = hist
-            self.slot_hcnt = hcnt
-            dev.update(tok=tok, active=active_out, budget=budget,
-                       hist=hist, hcnt=hcnt)
-            toks, emit = np.asarray(toks), np.asarray(emit)
-            counts = emit.sum(axis=-1)                        # (n, slots)
-            ran = counts >= 1
-            self.stats["spec_steps"] += int(steps)
-            self.stats["draft_proposed"] += self.speculative * int(ran.sum())
-            self.stats["draft_accepted"] += int((counts[ran] - 1).sum())
-        else:
-            with guard:
+                 toks, emit, steps, poisoned) = outs[:11]
+                if inject:
+                    dev["fin"] = outs[11]
+                # drafter state stays device-resident too; _prefill_into
+                # materializes to numpy only when it needs to seed a row
+                self.slot_hist = hist
+                self.slot_hcnt = hcnt
+                dev.update(tok=tok, active=active_out, budget=budget,
+                           hist=hist, hcnt=hcnt, poisoned=poisoned)
+                toks, emit = np.asarray(toks), np.asarray(emit)
+                counts = emit.sum(axis=-1)                    # (n, slots)
+                ran = counts >= 1
+                self.stats["spec_steps"] += int(steps)
+                prop = self.speculative * int(ran.sum())
+                acc = int((counts[ran] - 1).sum())
+                self.stats["draft_proposed"] += prop
+                self.stats["draft_accepted"] += acc
+                self._spec_ladder_update(prop, acc, probe)
+            else:
+                with guard:
+                    outs = self._c.scan(n, self.slots)(
+                        self.params, self.caches, dev["tok"], dev["active"],
+                        dev["budget"], dev["temps"], dev["anyt"], self.key,
+                        dev["poisoned"], *extra)
                 (self.caches, tok, active_out, budget, self.key, toks,
-                 emit) = self._c.scan(n, self.slots)(
-                    self.params, self.caches, dev["tok"], dev["active"],
-                    dev["budget"], dev["temps"], dev["anyt"], self.key)
-            dev.update(tok=tok, active=active_out, budget=budget)
-            toks, emit = np.asarray(toks), np.asarray(emit)
+                 emit, poisoned) = outs[:8]
+                if inject:
+                    dev["fin"] = outs[8]
+                dev.update(tok=tok, active=active_out, budget=budget,
+                           poisoned=poisoned)
+                toks, emit = np.asarray(toks), np.asarray(emit)
+                if self.speculative:
+                    self._hist_stale = True   # drafter history lags output
+        except F.KernelDispatchError as e:
+            return self._kernel_fallback(e, n)
         self.stats["tokens_emitted"] += int(emit.sum())
         self.slot_last = np.array(tok, np.int32)      # writable host mirrors
         self.slot_budget = np.array(budget, np.int32)
+        poisoned_np = np.asarray(poisoned)
         done: List[Result] = []
         for s in live:
             # row-major over (step[, position]) => chronological order
             self.slot_out[s].extend(
                 int(t) for t in toks[:, s][emit[:, s]])
-            if self.slot_budget[s] <= 0:
-                done.append(Result(self.slot_req[s].rid, self.slot_out[s]))
+            if poisoned_np[s]:
+                # disarm the slot's pending injections: a fault entry
+                # targets one occupant, not every future tenant of the slot
+                self._faults_fired.add(s)
+                done.append(self._finish(
+                    self.slot_req[s].rid, self.slot_out[s], "poisoned",
+                    "non-finite logits; slot quarantined"))
+                self._free_slot(s)
+            elif self.slot_budget[s] <= 0:
+                done.append(self._finish(
+                    self.slot_req[s].rid, self.slot_out[s], "ok"))
                 self.slot_free[s] = True
                 self.slot_req[s] = None
         return done
@@ -790,16 +1204,54 @@ class ServingEngine:
 
     # --------------------------------------------------------------- run ---
     def run(self, requests: List[Request]) -> List[Result]:
-        pending: Deque[Request] = collections.deque(requests)
-        results: List[Result] = []
-        while pending or not all(self.slot_free):
-            self._admit(pending)
-            results.extend(self._completed)
-            self._completed = []
-            n = self._block_len()
-            if n:
-                results.extend(self._decode_block(n))
-        return sorted(results, key=lambda r: r.rid)
+        """Serve a batch to completion; one Result per request, rid order,
+        each carrying a `status` (see STATUSES). Every finished request
+        lands in `self._completed` the moment it finalizes — never a
+        mid-loop local — so if an exception escapes this loop the caller
+        recovers everything already served via `take_completed()` (the
+        old code lost them: completed Results sat in a local `results`
+        list the raise threw away).
+
+        Overload: beyond `max_pending` queued requests, the tail is
+        REJECTED up front (bounded-queue backpressure — an overloaded
+        engine sheds load instead of buffering toward OOM). Per-request
+        `deadline`s are measured from this submission and enforced at
+        block boundaries."""
+        self._run_t0 = time.monotonic()
+        pending: Deque[Request] = collections.deque()
+        for r in requests:
+            if self.max_pending is not None and \
+                    len(pending) >= self.max_pending:
+                self._finish(r.rid, [], "rejected",
+                             f"queue overflow (max_pending="
+                             f"{self.max_pending})")
+            else:
+                pending.append(r)
+        try:
+            while pending or not all(self.slot_free):
+                self._expire_deadlines(pending)
+                self._admit(pending)
+                n = self._block_len()
+                if n:
+                    self._decode_block(n)
+        finally:
+            # surface scheduler rejections even if the loop died between
+            # plan() and the next _admit drain
+            self._drain_rejections()
+            self._run_t0 = None
+        return self.take_completed()
+
+
+def _poison_slot_k(caches, slot: int):
+    """Overwrite one slot's ring K caches with NaN (every layer, every
+    super-block) — the fault harness's cache-corruption primitive."""
+    def visit(c):
+        if isinstance(c, dict) and "k" in c:
+            c = dict(c)
+            c["k"] = c["k"].at[:, slot].set(jnp.nan)
+        return c
+    return jax.tree.map(visit, caches,
+                        is_leaf=lambda c: isinstance(c, dict) and "k" in c)
 
 
 def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:

@@ -1,0 +1,199 @@
+"""Deterministic fault injection for the serving engine (the chaos layer).
+
+Resilience claims are only as good as the faults you can reproduce. This
+module is the injection side of the engine's resilience contract: a
+`FaultPlan` describes, ahead of time and in static terms, exactly which
+slots get poisoned when — so a chaos run is a *program*, compiled once and
+bitwise repeatable, not a monkeypatch race.
+
+Three fault classes, three injection points:
+
+  * numerical poison (`poison_logits`, `poison_cache`) — NaN/Inf planted in
+    a chosen slot's logits at a chosen token index (compiled into the decode
+    scan body as a countdown-vector `where`, so the injected program differs
+    from production ONLY by that masked select and healthy slots stay
+    bitwise identical), or smeared over a slot's ring K cache between blocks
+    (exercising the guard's ability to catch corruption it didn't see born).
+  * kernel failure (`fail_pallas_dispatch`) — the Pallas decode kernel
+    raises `KernelDispatchError` at dispatch, driving the engine down the
+    graceful-degradation ladder to the ref impl.
+  * drafter corruption (`corrupt_draft_slots`) — a slot's speculative drafts
+    are replaced with out-of-vocabulary garbage; `drafter.sanitize` must
+    clip them so verification rejects the drafts instead of the gather
+    silently clamping (jax OOB semantics) into plausible-but-wrong tokens.
+
+`FaultPlan` is frozen/hashable on purpose: it is part of the engine's
+compile identity (`_get_compiled`), like the drafter spec — two engines
+differing only in faults get different programs, and `FaultPlan()` (the
+default) compiles the production program with zero injection code.
+
+The module also carries the engine's structured degradation-event channel
+(`record_event`/`consume_events`, mirroring `swat_decode._PAD_EVENTS`):
+every quarantine, fallback, rejection, and deadline expiry is recorded as a
+dict so tests, benchmarks (`BENCH_serve.json` resilience section), and the
+`kernel_bench --smoke` gate can assert "no degradation fired on a clean
+run" without scraping logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+NAN, INF = "nan", "inf"
+
+# never-fires countdown sentinel: the in-scan trigger is `fin == 0` (or
+# `0 <= fin < T` speculatively) and fin only ever decrements, so any
+# negative stage value can never match again
+NO_FAULT = np.int32(-(2 ** 30))
+
+
+class KernelDispatchError(RuntimeError):
+    """Simulated (or real) kernel dispatch failure — the engine catches it
+    and falls back to the reference decode impl."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static description of the faults to inject into one engine.
+
+    poison_logits: ((slot, token_idx, "nan"|"inf"), ...) — replace the
+        slot's whole logits row with the value at the decode step that
+        would emit token number `token_idx` of that slot (0-based over the
+        slot's output stream, so index 0 is the prefill-sampled token and
+        indices >= 1 are decode steps; an index of 0 never fires — prefill
+        sampling is outside the scan). Speculatively the whole (T,V) verify
+        row is poisoned at the step whose emission window covers the index.
+    poison_cache: ((slot, token_idx), ...) — overwrite the slot's ring K
+        caches with NaN once the slot has emitted `token_idx` tokens
+        (applied between decode blocks; the next step's attention propagates
+        it into the logits where the in-scan guard catches it).
+    corrupt_draft_slots: slots whose speculative drafts are replaced with
+        out-of-vocab garbage inside the scan body.
+    fail_pallas_dispatch: make the Pallas decode kernel raise
+        `KernelDispatchError` at dispatch (armed at engine construction;
+        call `clear_kernel_failure()` when done — module-global flag).
+    """
+    poison_logits: Tuple[Tuple[int, int, str], ...] = ()
+    poison_cache: Tuple[Tuple[int, int], ...] = ()
+    corrupt_draft_slots: Tuple[int, ...] = ()
+    fail_pallas_dispatch: bool = False
+
+    def __post_init__(self):
+        for slot, idx, kind in self.poison_logits:
+            assert kind in (NAN, INF), kind
+            assert slot >= 0 and idx >= 0, (slot, idx)
+        seen = [s for s, _, _ in self.poison_logits]
+        assert len(seen) == len(set(seen)), (
+            "one poison_logits entry per slot (the countdown vector holds "
+            f"a single trigger index per slot): {self.poison_logits}")
+
+    @property
+    def any(self) -> bool:
+        return bool(self.poison_logits or self.poison_cache
+                    or self.corrupt_draft_slots or self.fail_pallas_dispatch)
+
+    @property
+    def has_logit_faults(self) -> bool:
+        """True when the compiled scan body carries injection code (an
+        extra countdown-vector argument + one masked select)."""
+        return bool(self.poison_logits)
+
+    # ------------------------------------------------------------ staging --
+    def inf_mask(self, slots: int) -> np.ndarray:
+        """(slots,) bool: True where the poison value is +inf (else nan).
+        Static per plan — baked into the scan as a constant."""
+        m = np.zeros((slots,), bool)
+        for slot, _, kind in self.poison_logits:
+            if slot < slots and kind == INF:
+                m[slot] = True
+        return m
+
+    def draft_mask(self, slots: int) -> np.ndarray:
+        """(slots,) bool: slots whose drafts are corrupted. Static."""
+        m = np.zeros((slots,), bool)
+        for slot in self.corrupt_draft_slots:
+            if slot < slots:
+                m[slot] = True
+        return m
+
+    def logit_countdown(self, slots: int, tokens_done,
+                        fired=()) -> np.ndarray:
+        """(slots,) int32 countdown the engine stages at the start of a
+        decode block: `target_idx - tokens_done[slot]`, NO_FAULT where the
+        slot has no pending trigger. The scan decrements it by each step's
+        emission count, firing when it reaches zero. `fired` lists slots
+        whose fault already went off — each entry targets the slot's
+        first occupant only, so a request admitted into the quarantined
+        slot afterwards decodes clean."""
+        fin = np.full((slots,), NO_FAULT, np.int32)
+        for slot, idx, _ in self.poison_logits:
+            if slot < slots and slot not in fired:
+                rem = idx - int(tokens_done[slot])
+                fin[slot] = rem if rem > 0 else NO_FAULT
+        return fin
+
+    def cache_poisons_due(self, slots: int, tokens_done, applied) -> list:
+        """Slots whose ring caches are due for poisoning: emitted at least
+        `token_idx` tokens and not in `applied` yet."""
+        return [s for s, idx in self.poison_cache
+                if s < slots and s not in applied
+                and int(tokens_done[s]) >= idx]
+
+
+# ------------------------------------------------- degradation event bus --
+
+_EVENTS: List[dict] = []
+
+
+def record_event(kind: str, **details) -> None:
+    """Record one structured degradation event (quarantine, fallback,
+    rejection, deadline, spec disable/resume...). Process-global like
+    `swat_decode._PAD_EVENTS` — drain with `consume_events()`."""
+    _EVENTS.append({"kind": kind, **details})
+
+
+def consume_events() -> List[dict]:
+    out, _EVENTS[:] = list(_EVENTS), []
+    return out
+
+
+def peek_events() -> List[dict]:
+    return list(_EVENTS)
+
+
+# ------------------------------------------------- simulated kernel fault --
+
+def install_kernel_failure() -> None:
+    """Arm the Pallas decode kernel to raise `KernelDispatchError` on its
+    next dispatch. Module-global (covers every engine in the process) —
+    pair with `clear_kernel_failure()` in a finally block."""
+    from repro.kernels import swat_decode as K
+    K.set_force_fail(True)
+
+
+def clear_kernel_failure() -> None:
+    from repro.kernels import swat_decode as K
+    K.set_force_fail(False)
+
+
+# ------------------------------------------------------ malformed inputs --
+
+def malformed_prompts(vocab_size: int, *, oversize: int = 0,
+                      seed: int = 0) -> List[Tuple[np.ndarray, str]]:
+    """Deterministic adversarial prompt corpus: (prompt, expected-flavor)
+    pairs the scheduler must REJECT per-request (never raise). `oversize`
+    > 0 adds a prompt longer than that bound (pair with the engine's
+    `max_prompt_len` knob)."""
+    rng = np.random.RandomState(seed)
+    out: List[Tuple[np.ndarray, str]] = [
+        (np.zeros((0,), np.int32), "empty"),
+        (np.zeros((3, 0), np.int32), "empty"),
+        (np.asarray([1, vocab_size + 7, 2], np.int32), "token id"),
+        (np.asarray([-4, 1, 2], np.int32), "token id"),
+    ]
+    if oversize:
+        out.append((rng.randint(0, vocab_size, (oversize + 1,))
+                    .astype(np.int32), "longer than"))
+    return out

@@ -14,6 +14,17 @@ import jax
 import jax.numpy as jnp
 
 
+def finite_rows(logits):
+    """(B,) bool: row is entirely finite (no NaN/Inf anywhere in its
+    trailing axes). The decode scan's numerical guard: a poisoned row's
+    argmax/categorical output is garbage, so the engine quarantines the
+    slot instead of emitting it. Strictly row-wise (like every sampling op
+    here) — the reduction runs over the local vocab/position axes only, so
+    under a slot-sharded mesh it adds ZERO collectives, and healthy rows'
+    tokens are bitwise unchanged by the check existing."""
+    return jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
+
+
 def sample(key, logits, temperatures, top_k: int = 0, any_sampling=None):
     """Draw one token per row. logits: (B, V); temperatures: (B,) — rows
     with temperature <= 0 are greedy. top_k: static int, 0 disables.

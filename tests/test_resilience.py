@@ -1,0 +1,385 @@
+"""Resilient serving: fault injection, slot quarantine, degradation ladder.
+
+The contract under chaos (src/repro/serving/faults.py drives it):
+
+  * a slot whose logits go non-finite is QUARANTINED — finalized as status
+    'poisoned' with exactly the tokens emitted before the fault, the slot
+    freed and refilled — while every healthy slot's tokens stay BITWISE
+    identical to a fault-free run (the guards are row-wise and always
+    compiled; injection only compiles when a plan asks for it),
+  * sequential and speculative engines agree on the poisoned request's
+    exact kept-token count (per-position injection in the verify window),
+  * a Pallas dispatch failure degrades to the reference impl with a
+    one-time warning and the batch still completes (status 'ok'),
+  * malformed prompts are per-request rejections, never batch killers,
+  * deadlines, bounded-queue backpressure and the speculative acceptance
+    ladder all finalize with honest statuses instead of raising.
+
+Everything here runs on the CPU smoke config; the 4-device slot-parallel
+chaos case lives in test_serving_sharded.py with the other mesh suites.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, with_swat
+from repro.core import model as Mod
+from repro.serving import faults as F
+from repro.serving.engine import Request, Result, ServingEngine, STATUSES
+from repro.serving.faults import FaultPlan, KernelDispatchError
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3p2_1b")
+    params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def swat_setup():
+    cfg = with_swat(get_smoke_config("llama3p2_1b"), window=16, num_global=4)
+    params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _clean_event_bus():
+    """Each test sees only its own degradation events."""
+    F.consume_events()
+    yield
+    F.consume_events()
+
+
+def mkreqs(cfg, n=3, m=10, plen=12):
+    return [Request(rid=i, prompt=np.random.RandomState(i).randint(
+                0, cfg.vocab_size, (plen,)).astype(np.int32),
+                max_new_tokens=m) for i in range(n)]
+
+
+def by_rid(results):
+    return {r.rid: r for r in results}
+
+
+# ------------------------------------------------ logit poison / quarantine
+
+
+def test_statuses_taxonomy():
+    assert STATUSES == ("ok", "rejected", "poisoned", "deadline", "failed")
+    assert Result(rid=0, tokens=[1]).ok
+    assert not Result(rid=0, tokens=[], status="rejected", reason="x").ok
+
+
+def test_clean_run_emits_no_events_and_default_plan_is_inert(setup):
+    cfg, params = setup
+    plan = FaultPlan()
+    assert not plan.any and not plan.has_logit_faults
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, scan_steps=4)
+    out = eng.run(mkreqs(cfg))
+    assert all(r.status == "ok" and r.reason == "" for r in out)
+    assert F.consume_events() == []
+    assert eng.stats["quarantined"] == 0
+
+
+def test_nan_quarantine_healthy_slots_bitwise(setup):
+    """Poison slot 0's logits at token index 4: that request finalizes as
+    'poisoned' with EXACTLY its 4 clean tokens (a prefix of its fault-free
+    output), the slot frees and serves the next request clean (a fault
+    entry targets one occupant), and the co-batched requests — including
+    the one reusing the quarantined slot — are bitwise the fault-free
+    run."""
+    cfg, params = setup
+    clean = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                          scan_steps=4)
+    ref = by_rid(clean.run(mkreqs(cfg)))
+
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, scan_steps=4,
+                        faults=FaultPlan(poison_logits=((0, 4, "nan"),)))
+    out = by_rid(eng.run(mkreqs(cfg)))
+    assert out[0].status == "poisoned" and len(out[0].tokens) == 4
+    assert "quarantined" in out[0].reason
+    assert out[0].tokens == ref[0].tokens[:4]
+    assert out[1].status == "ok" and out[1].tokens == ref[1].tokens
+    # rid 2 refills the quarantined slot and must decode clean + identical
+    assert out[2].status == "ok" and out[2].tokens == ref[2].tokens
+    assert eng.stats["quarantined"] == 1
+    kinds = [e["kind"] for e in F.consume_events()]
+    assert kinds == ["slot_quarantined"]
+
+
+def test_inf_quarantine_pallas_impl(swat_setup):
+    """Same quarantine contract on the Pallas decode path (+inf flavor)."""
+    cfg, params = swat_setup
+    clean = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                          scan_steps=2, decode_impl="pallas")
+    ref = by_rid(clean.run(mkreqs(cfg, m=8)))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, scan_steps=2,
+                        decode_impl="pallas",
+                        faults=FaultPlan(poison_logits=((1, 3, "inf"),)))
+    out = by_rid(eng.run(mkreqs(cfg, m=8)))
+    assert out[1].status == "poisoned" and len(out[1].tokens) == 3
+    assert out[1].tokens == ref[1].tokens[:3]
+    for i in (0, 2):
+        assert out[i].status == "ok" and out[i].tokens == ref[i].tokens
+
+
+def test_spec_quarantine_exact_count_parity(setup):
+    """Speculative injection is per verify-POSITION, so the poisoned
+    request keeps exactly target_idx tokens — the same count the
+    sequential engine keeps for the same plan."""
+    cfg, params = setup
+    clean = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                          scan_steps=4, speculative=2)
+    ref = by_rid(clean.run(mkreqs(cfg)))
+    plan = FaultPlan(poison_logits=((1, 6, "nan"),))
+    spec = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                         scan_steps=4, speculative=2, faults=plan)
+    seq = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                        scan_steps=4, faults=plan)
+    for eng in (spec, seq):
+        out = by_rid(eng.run(mkreqs(cfg)))
+        assert out[1].status == "poisoned" and len(out[1].tokens) == 6
+        assert out[1].tokens == ref[1].tokens[:6]
+        assert out[0].tokens == ref[0].tokens
+        assert out[2].tokens == ref[2].tokens
+
+
+def test_corrupt_drafts_token_identical(setup):
+    """Out-of-vocab drafter proposals are sanitized and simply fail
+    verification: zero acceptance, but token-for-token the clean spec run
+    (which itself is token-for-token the sequential engine)."""
+    cfg, params = setup
+    clean = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                          scan_steps=4, speculative=2)
+    ref = by_rid(clean.run(mkreqs(cfg)))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, scan_steps=4,
+                        speculative=2,
+                        faults=FaultPlan(corrupt_draft_slots=(0, 1)))
+    out = by_rid(eng.run(mkreqs(cfg)))
+    for i in range(3):
+        assert out[i].status == "ok" and out[i].tokens == ref[i].tokens
+    assert eng.stats["draft_accepted"] == 0
+    assert clean.stats["draft_accepted"] > 0
+
+
+def test_cache_poison_quarantine(setup):
+    """NaN-ing a slot's ring K cache rows between blocks surfaces as
+    non-finite logits on its next step -> quarantined, healthy slots
+    bitwise clean."""
+    cfg, params = setup
+    clean = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                          scan_steps=4)
+    ref = by_rid(clean.run(mkreqs(cfg)))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64, scan_steps=4,
+                        faults=FaultPlan(poison_cache=((0, 3),)))
+    out = by_rid(eng.run(mkreqs(cfg)))
+    assert out[0].status == "poisoned"
+    # poison applies at a block boundary after >= 3 tokens; everything the
+    # slot emitted before it must be a clean prefix
+    assert 3 <= len(out[0].tokens) < 10
+    assert out[0].tokens == ref[0].tokens[:len(out[0].tokens)]
+    assert out[1].status == "ok" and out[1].tokens == ref[1].tokens
+    assert out[2].status == "ok" and out[2].tokens == ref[2].tokens
+    kinds = [e["kind"] for e in F.consume_events()]
+    assert "cache_poisoned" in kinds and "slot_quarantined" in kinds
+
+
+# ------------------------------------------------- degradation ladder
+
+
+def test_pallas_dispatch_failure_falls_back_to_ref(swat_setup):
+    """An injected Pallas dispatch failure must not kill the batch: the
+    engine recompiles with the reference impl, warns once, and the results
+    are token-for-token the ref engine's."""
+    cfg, params = swat_setup
+    ref_eng = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                            scan_steps=2, decode_impl="ref")
+    ref = by_rid(ref_eng.run(mkreqs(cfg, m=8)))
+    F.consume_events()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            eng = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                                scan_steps=2, decode_impl="pallas",
+                                faults=FaultPlan(fail_pallas_dispatch=True))
+            out = by_rid(eng.run(mkreqs(cfg, m=8)))
+    finally:
+        F.clear_kernel_failure()
+    assert eng.decode_impl == "ref"
+    assert eng.stats["kernel_fallbacks"] == 1
+    for i in range(3):
+        assert out[i].status == "ok" and out[i].tokens == ref[i].tokens
+    pallas_warnings = [x for x in w
+                       if "pallas" in str(x.message).lower()]
+    assert len(pallas_warnings) == 1, "fallback warning must be one-time"
+    assert "pallas_fallback" in [e["kind"] for e in F.consume_events()]
+
+
+def test_kernel_failure_primitive_arms_and_clears():
+    """The injection primitive itself: armed -> swat_decode raises
+    KernelDispatchError before touching its operands (trace time, so the
+    engine's donated caches are never consumed); cleared -> inert."""
+    from repro.kernels import swat_decode as K
+    F.install_kernel_failure()
+    try:
+        with pytest.raises(KernelDispatchError, match="injected"):
+            K.swat_decode(None, None, None, None)
+    finally:
+        F.clear_kernel_failure()
+    assert K._FORCE_FAIL is False
+
+
+def test_spec_autodisable_and_probe_resume(setup):
+    """Random prompts give the n-gram drafter ~zero acceptance: the ladder
+    must auto-disable speculation once the windowed rate drops below
+    threshold, probe again after spec_retry_blocks sequential blocks, and
+    keep output token-identical to the sequential engine throughout."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=128,
+                        scan_steps=4, speculative=2,
+                        spec_min_acceptance=0.95,
+                        spec_acceptance_window=2,
+                        spec_retry_blocks=2,
+                        spec_resume_acceptance=0.0)
+    out = by_rid(eng.run(mkreqs(cfg, n=2, m=40)))
+    assert all(r.status == "ok" and len(r.tokens) == 40
+               for r in out.values())
+    assert eng.stats["spec_autodisable"] >= 1
+    # spec_resume_acceptance=0.0 makes every probe succeed -> the ladder
+    # exercised the full off->probe->on->off cycle at least once
+    assert eng.stats["spec_resume"] >= 1
+    kinds = [e["kind"] for e in F.consume_events()]
+    assert "spec_autodisable" in kinds and "spec_resume" in kinds
+
+    seq = ServingEngine(cfg, params, batch_slots=2, max_len=128,
+                        scan_steps=4)
+    ref = by_rid(seq.run(mkreqs(cfg, n=2, m=40)))
+    for i in range(2):
+        assert out[i].tokens == ref[i].tokens
+
+
+# -------------------------------------------- admission / queue resilience
+
+
+def test_malformed_prompts_rejected_per_request(setup):
+    """Every malformed flavor the harness generates (empty, out-of-vocab,
+    negative ids, oversized) finalizes as status 'rejected' with a reason
+    naming the flavor — and the healthy requests around them serve to
+    completion."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                        scan_steps=2, max_prompt_len=32)
+    bad = F.malformed_prompts(cfg.vocab_size, oversize=40)
+    assert len(bad) >= 4
+    reqs = mkreqs(cfg, n=2, m=4)
+    reqs += [Request(rid=10 + j, prompt=p, max_new_tokens=4)
+             for j, (p, _) in enumerate(bad)]
+    out = by_rid(eng.run(reqs))
+    assert out[0].status == "ok" and out[1].status == "ok"
+    for j, (_, flavor) in enumerate(bad):
+        r = out[10 + j]
+        assert r.status == "rejected" and r.tokens == []
+        assert flavor in r.reason, (flavor, r.reason)
+    assert eng.stats["rejected"] == len(bad)
+    kinds = [e["kind"] for e in F.consume_events()]
+    assert kinds.count("request_rejected") == len(bad)
+
+
+def test_oversized_prompt_admissible_by_default(setup):
+    """max_prompt_len is opt-in: without it, long prompts stay admissible
+    (ring prefill serves them exactly — only the last window survives)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, scan_steps=2)
+    long_prompt = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (80,)).astype(np.int32)
+    out = eng.run([Request(rid=0, prompt=long_prompt, max_new_tokens=4)])
+    assert out[0].status == "ok" and len(out[0].tokens) == 4
+
+
+def test_backpressure_bounded_queue(setup):
+    """Beyond max_pending queued requests the tail sheds as 'rejected'
+    (queue overflow) instead of buffering without bound — FCFS head
+    still serves."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                        scan_steps=2, max_pending=3)
+    out = by_rid(eng.run(mkreqs(cfg, n=8, m=4)))
+    statuses = [out[i].status for i in range(8)]
+    assert statuses == ["ok"] * 3 + ["rejected"] * 5
+    for i in range(3, 8):
+        assert "queue overflow" in out[i].reason
+    assert eng.stats["rejected"] == 5
+
+
+def test_deadline_expires_queued_request(setup):
+    """A queued request whose deadline lapses before a slot frees
+    finalizes as 'deadline' with zero tokens; the batch ahead of it is
+    untouched."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, scan_steps=2)
+    reqs = mkreqs(cfg, n=2, m=6)
+    reqs[1] = Request(rid=1, prompt=reqs[1].prompt, max_new_tokens=6,
+                      deadline=1e-9)
+    out = by_rid(eng.run(reqs))
+    assert out[0].status == "ok" and len(out[0].tokens) == 6
+    assert out[1].status == "deadline" and out[1].tokens == []
+    assert eng.stats["deadline"] == 1
+    assert "deadline_expired" in [e["kind"] for e in F.consume_events()]
+
+
+def test_deadline_expires_live_slot_with_partial_tokens(setup, monkeypatch):
+    """A live slot past its deadline finalizes with whatever it emitted
+    (status 'deadline'), freeing the slot at the next block boundary.
+    Deterministic: the engine's clock is faked to advance a fixed step per
+    reading, so the test never races real decode speed."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=128,
+                        scan_steps=2)
+    now = {"t": 0.0}
+
+    class _Clock:
+        @staticmethod
+        def monotonic():
+            now["t"] += 0.1
+            return now["t"]
+
+    monkeypatch.setattr("repro.serving.engine.time", _Clock)
+    prompt = np.random.RandomState(7).randint(
+        0, cfg.vocab_size, (12,)).astype(np.int32)
+    # clock advances 0.1 per reading (one per run-loop iteration), so a
+    # 0.35 deadline lapses after a few 2-step blocks, far short of 400
+    out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=400,
+                           deadline=0.35)])
+    assert out[0].status == "deadline"
+    assert "deadline" in out[0].reason
+    assert 0 < len(out[0].tokens) < 400
+    assert eng.stats["deadline"] == 1
+    assert eng.slot_free == [True]       # slot actually freed for reuse
+    assert "deadline_expired" in [e["kind"] for e in F.consume_events()]
+
+
+def test_run_flushes_completed_results_on_exception(setup):
+    """The satellite bugfix: results finished before a mid-loop exception
+    must survive it. The seed kept them in a local list that the raise
+    threw away; now they land in the engine the moment they finalize and
+    `take_completed()` recovers them."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=64, scan_steps=2)
+    calls = {"n": 0}
+    real_plan = eng.scheduler.plan
+
+    def exploding_plan(pending, num_free):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise RuntimeError("scheduler exploded mid-run")
+        return real_plan(pending, num_free)
+
+    eng.scheduler.plan = exploding_plan
+    with pytest.raises(RuntimeError, match="exploded"):
+        eng.run(mkreqs(cfg, n=2, m=4))
+    rescued = eng.take_completed()
+    assert [r.rid for r in rescued] == [0]
+    assert rescued[0].status == "ok" and len(rescued[0].tokens) == 4
+    F.consume_events()

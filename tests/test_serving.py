@@ -281,10 +281,21 @@ def test_scheduler_slot_quantum_trims_to_multiple():
 
 
 def test_empty_prompt_rejected(setup):
+    """An empty prompt is a malformed REQUEST, not a malformed batch: it
+    finalizes as status 'rejected' (with the reason in `reason`) and the
+    rest of the batch serves normally. The seed raised ValueError out of
+    `run()`, destroying every co-batched request."""
     cfg, params = setup
     eng = ServingEngine(cfg, params, batch_slots=1, max_len=64)
-    with pytest.raises(ValueError, match="empty prompt"):
-        eng.run([Request(rid=0, prompt=np.zeros((0,), np.int32))])
+    out = eng.run([Request(rid=0, prompt=np.zeros((0,), np.int32)),
+                   Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 1,
+                           max_new_tokens=4)])
+    by = {r.rid: r for r in out}
+    assert by[0].status == "rejected" and by[0].tokens == []
+    assert "empty prompt" in by[0].reason
+    assert by[1].status == "ok" and len(by[1].tokens) == 4
+    from repro.serving import faults as F
+    F.consume_events()
 
 
 def test_allocation_rounding_does_not_widen_window(swat_setup):

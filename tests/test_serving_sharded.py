@@ -150,3 +150,32 @@ def test_speculative_slot_parallel_identical():
     print("ok sharded speculative identical; acceptance",
           round(eng.acceptance_rate, 3))
     """)
+
+
+def test_chaos_quarantine_slot_parallel():
+    """Fault injection on the 4-device slot-parallel mesh — the ISSUE-8
+    acceptance bar: NaN-poisoning one slot's logits quarantines exactly
+    that request (status 'poisoned', clean-prefix tokens) while every
+    healthy slot stays BITWISE identical to the fault-free sharded run.
+    The injected scan is still slot-local math, so the guarded program is
+    held to the same zero-collective budget (launch/analyze chaos_4x1)."""
+    run_sub(COMMON + """
+    from repro.serving import faults as Flt
+    from repro.serving.faults import FaultPlan
+
+    _, base = run(mesh_lib.make_debug_mesh(4, 1))
+    Flt.consume_events()
+    eng = ServingEngine(cfg, params, batch_slots=4, max_len=128,
+                        scan_steps=4, seed=11,
+                        mesh=mesh_lib.make_debug_mesh(4, 1),
+                        faults=FaultPlan(poison_logits=((2, 3, "nan"),)))
+    out = {r.rid: r for r in eng.run(reqs())}
+    assert out[2].status == "poisoned", out[2]
+    assert len(out[2].tokens) == 3 and out[2].tokens == base[2][:3]
+    for i in (0, 1, 3, 4, 5):
+        assert out[i].status == "ok" and out[i].tokens == base[i], i
+    assert eng.stats["quarantined"] == 1
+    kinds = [e["kind"] for e in Flt.consume_events()]
+    assert "slot_quarantined" in kinds, kinds
+    print("ok sharded chaos quarantine bitwise")
+    """)
