@@ -248,6 +248,13 @@ def smoke(rng):
     #    quarantined slots on a clean run, or that a drill was a no-op,
     #    refuses here
     check_serve_resilience()
+
+    # 7. prefix-sharing gate over the same artifact: the paged engine's
+    #    shared-prefix workload must have recorded a prefill-work ratio
+    #    below the 0.5 floor with identical tokens and real block dedup —
+    #    a cache-contract change that silently disables sharing (or makes
+    #    COW lossy) refuses here
+    check_serve_prefix_sharing()
     print("[kernel_bench] smoke OK")
 
 
@@ -281,6 +288,38 @@ def check_serve_resilience(path=None):
     print(f"[kernel_bench] resilience gate: clean run event-free; "
           f"drills fired (quarantined={q['quarantined']}, "
           f"fallbacks={fb['kernel_fallbacks']})")
+
+
+def check_serve_prefix_sharing(path=None):
+    """Gate on BENCH_serve.json's `prefix_sharing` section (written by
+    benchmarks/serve_bench.py): >= 8 shared-prefix requests, prefill-work
+    ratio < 0.5, at least one prefix actually shared, pool blocks deduped
+    at admission, tokens identical to the unshared paged engine."""
+    import json
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(path) as f:
+        payload = json.load(f)
+    ps = payload.get("prefix_sharing")
+    assert ps is not None, (
+        "BENCH_serve.json has no `prefix_sharing` section — regenerate "
+        "with benchmarks/serve_bench.py")
+    assert ps["requests"] >= 8, ps
+    assert ps["identical_to_unshared"], (
+        f"prefix sharing changed tokens: {ps} — COW or the shareable-"
+        "block invariant is broken; that is an engine regression")
+    ratio = ps["prefill_tokens"]["ratio"]
+    assert ratio < 0.5, (
+        f"prefix sharing saved too little prefill work (ratio {ratio}, "
+        f"floor 0.5): {ps}")
+    assert ps["prefix_prefills_shared"] >= 1, ps
+    pool = ps["pool_blocks_at_admission"]
+    assert pool["sharing"] < pool["baseline"], (
+        f"prefix blocks did not dedup in the pool: {pool}")
+    print(f"[kernel_bench] prefix-sharing gate: ratio {ratio} < 0.5 over "
+          f"{ps['requests']} requests, pool {pool['sharing']} vs "
+          f"{pool['baseline']} blocks, tokens identical")
 
 
 def check_benchmark_artifact(path=None):

@@ -31,7 +31,10 @@ context — the paper's Fig. 3 linear-memory claim applied to decode — and
 writes the whole run to BENCH_serve.json (shapes, tok/s per mode, parity
 flags) so future PRs have a machine-readable perf trajectory to diff.
 
-A `resilience` section records the fault-injection probes (clean-run
+A `prefix_sharing` section records the paged-KV shared-prefix workload
+(>= 8 requests behind one system prompt: prefill work must drop below
+0.5x, prefix pool blocks must dedup, tokens must stay identical), and a
+`resilience` section records the fault-injection probes (clean-run
 degradation events must be ZERO; the quarantine and pallas-fallback
 drills must fire) — `kernel_bench --smoke` refuses on a bad section.
 `--resilience-only` reruns just those probes and merges the section into
@@ -199,6 +202,84 @@ def resilience_section(cfg, params, reqs):
           and qeng.stats["quarantined"] == 1 and healthy_identical
           and feng.stats["kernel_fallbacks"] == 1 and fb_ok
           and fb_identical)
+    return section, ok
+
+
+def prefix_sharing_section(cfg, params):
+    """Paged-KV prefix sharing -> the BENCH_serve.json `prefix_sharing`
+    section: >= 8 requests behind one shared system prompt, served by the
+    paged engine with sharing off vs on. Sharing must cut prefill work
+    below 0.5x (the prefix prefills ONCE), dedup the prefix blocks in the
+    pool (cache bytes), and stay token-identical — copy-on-write covers
+    the divergence. Returns (section, ok)."""
+    import collections
+
+    from repro.serving.engine import Request, ServingEngine
+
+    n = max(8, ARGS.requests)
+    rng = np.random.RandomState(13)
+    sys_prompt = rng.randint(0, cfg.vocab_size, (96,)).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.randint(0, cfg.vocab_size, (16,)
+                                           ).astype(np.int32)])
+               for _ in range(n)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=16)
+                for i, p in enumerate(prompts)]
+
+    def engine(share):
+        return ServingEngine(cfg, params, batch_slots=n,
+                             max_len=ARGS.max_len, kv_layout="paged",
+                             prefill_chunk=32, share_prefix=share)
+
+    def blocks_at_admission(eng):
+        pend = collections.deque(reqs())
+        eng._run_t0 = 0.0
+        eng._admit(pend)
+        used = eng.paged_stats()["blocks_in_use"]
+        eng._run_t0 = None
+        res = {r.rid: r for r in eng.run(list(pend)) + eng.take_completed()}
+        return used, res
+
+    off = engine(False)
+    off_blocks, off_res = blocks_at_admission(off)
+    on = engine(True)
+    on_blocks, on_res = blocks_at_admission(on)
+
+    identical = all(off_res[i].tokens == on_res[i].tokens for i in off_res)
+    ratio = (on.stats["prefill_tokens_computed"]
+             / max(off.stats["prefill_tokens_computed"], 1))
+    # bytes per pool block: K+V rows for one block across every super-block
+    # (shared pools are (S, NB, H, page, D); a block is one NB row)
+    page_bytes = 0
+    for c in on.caches.values():
+        if isinstance(c, dict) and "pk" in c:
+            pk = c["pk"]
+            page_bytes = 2 * pk.dtype.itemsize * int(
+                np.prod(pk.shape)) // pk.shape[1]
+            break
+    print(f"[serve_bench] prefix sharing ({n} reqs, 96-token system "
+          f"prompt): prefill tokens {on.stats['prefill_tokens_computed']} "
+          f"vs {off.stats['prefill_tokens_computed']} ({ratio:.2f}x, gate "
+          f"< 0.5); pool blocks at admission {on_blocks} vs {off_blocks} "
+          f"(~{(off_blocks - on_blocks) * page_bytes / 1e3:.1f}KB saved); "
+          f"identical {identical}")
+    section = {
+        "requests": n, "system_prompt_len": 96, "suffix_len": 16,
+        "prefill_tokens": {
+            "sharing": int(on.stats["prefill_tokens_computed"]),
+            "baseline": int(off.stats["prefill_tokens_computed"]),
+            "ratio": round(ratio, 4)},
+        "pool_blocks_at_admission": {
+            "sharing": int(on_blocks), "baseline": int(off_blocks),
+            "page_bytes": int(page_bytes)},
+        "prefix_prefills_shared": int(on.stats["prefill_prefix_shared"]),
+        "identical_to_unshared": bool(identical),
+    }
+    ok = (identical and ratio < 0.5
+          and on.stats["prefill_prefix_shared"] >= 1
+          and on_blocks < off_blocks)
     return section, ok
 
 
@@ -436,6 +517,7 @@ def main():
     payload["ring_cache"] = {"context": ctx, "ring_bytes": ring,
                              "dense_bytes": dn,
                              "ratio": round(dn / max(ring, 1), 1)}
+    payload["prefix_sharing"], share_ok = prefix_sharing_section(cfg, params)
     payload["resilience"], res_ok = resilience_section(cfg, params, reqs)
     from benchmarks.common import write_json
     write_json(ARGS.out, payload)
@@ -454,6 +536,11 @@ def main():
     if not spec_ok:
         print("[serve_bench] FAIL: speculative decode below the 1.3x bar "
               "or not token-identical", file=sys.stderr)
+        sys.exit(1)
+    if not share_ok:
+        print("[serve_bench] FAIL: prefix sharing above the 0.5x prefill "
+              "bar, no block dedup, or not token-identical",
+              file=sys.stderr)
         sys.exit(1)
     if not res_ok:
         print("[serve_bench] FAIL: resilience probes (clean-run events "

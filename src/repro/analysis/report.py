@@ -87,12 +87,21 @@ def analyze_entry_points(points: Sequence[T.EntryPoint], *,
     findings += R.audit_recompiles(traced, max_per_family=caps)
 
     for ev in pad_events or ():
-        findings.append(R.Finding(
-            "pad_fallback", R.WARN, label or "kernels",
-            f"decode_block_kv window {ev.get('w')} pads block_kv "
-            f"{ev.get('block_kv')} -> {ev.get('min_block')} — odd window "
-            "sizes waste KV bandwidth on the hot path",
-            dict(ev)))
+        if ev.get("kind") == "paged_gather":
+            findings.append(R.Finding(
+                "paged_gather_fallback", R.WARN, label or "kernels",
+                f"paged decode materializes a {ev.get('nb')}x"
+                f"{ev.get('page')}-row gather-view outside the kernel "
+                "(pool-sized copy per step; an in-kernel block gather "
+                "would remove it)",
+                dict(ev)))
+        else:
+            findings.append(R.Finding(
+                "pad_fallback", R.WARN, label or "kernels",
+                f"decode_block_kv window {ev.get('w')} pads block_kv "
+                f"{ev.get('block_kv')} -> {ev.get('chosen_block', ev.get('min_block'))}"
+                " — odd window sizes waste KV bandwidth on the hot path",
+                dict(ev)))
 
     errors = sum(1 for f in findings if f.severity == R.ERROR)
     warns = sum(1 for f in findings if f.severity == R.WARN)

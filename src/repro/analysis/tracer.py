@@ -316,7 +316,8 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
     c = engine._c
     cfg = engine.cfg
     slots = engine.slots
-    base = engine_tags(engine)
+    paged = bool(getattr(c, "paged", False))
+    base = engine_tags(engine) | ({"paged"} if paged else frozenset())
     v = cfg.vocab_size
     if batch_sizes is None:
         batch_sizes = sorted({1, slots})
@@ -332,8 +333,24 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
             lambda: Mod.init_caches(cfg, n, engine.max_len,
                                     lookahead=c.lookahead))
 
+    def slot_caches_sds():
+        """Resident slot-cache avals: paged engines hold the block pool +
+        tables, contiguous engines the per-slot rings. Prefill-row caches
+        (caches_sds) stay contiguous either way — admission converts."""
+        if not paged:
+            return caches_sds(slots)
+        return jax.eval_shape(
+            lambda: Mod.init_paged_caches(cfg, slots, engine.max_len,
+                                          lookahead=c.lookahead,
+                                          shared_pool=engine.mesh is None))
+
     def sds(shape, dtype=jnp.int32):
         return jax.ShapeDtypeStruct(shape, dtype)
+
+    if paged:
+        layout = Mod.paged_layout(cfg, engine.max_len, c.lookahead)
+        tables_sds = {f"l{i}": sds((slots, geo["nb"]))
+                      for i, geo in layout.items()}
 
     points: List[EntryPoint] = []
     for n in batch_sizes:
@@ -349,11 +366,19 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
                 args=(params_sds, caches_sds(n), sds((n, chunk_len)),
                       sds(()), sds((n,)), sds((n, v), jnp.float32)),
                 carries=(1, 5), tags=base))
-        points.append(EntryPoint(
-            name=f"cache_insert[slots={slots},n={n}]", family="cache_insert",
-            fn=c.insert(slots, n),
-            args=(caches_sds(slots), caches_sds(n), sds((n,))),
-            carries=(0,), tags=base))
+        if paged:
+            points.append(EntryPoint(
+                name=f"cache_insert_paged[slots={slots},n={n}]",
+                family="cache_insert_paged", fn=c.insert_paged(slots, n),
+                args=(slot_caches_sds(), caches_sds(n), sds((n,)),
+                      tables_sds),
+                carries=(0,), tags=base))
+        else:
+            points.append(EntryPoint(
+                name=f"cache_insert[slots={slots},n={n}]",
+                family="cache_insert", fn=c.insert(slots, n),
+                args=(caches_sds(slots), caches_sds(n), sds((n,))),
+                carries=(0,), tags=base))
         points.append(EntryPoint(
             name=f"sample[n={n}]", family="sample", fn=c.sample(n),
             args=(key_sds, sds((n, v), jnp.float32),
@@ -361,6 +386,19 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
             tags=base))
 
     hot = base | {"decode_hot_path"}
+    if paged:
+        # the COW/table-push maintenance dispatch runs BETWEEN decode
+        # blocks — it shares the hot-path contract (donated pool, zero
+        # collectives). COW moves (m>0) only exist on the shared pool:
+        # under a mesh the pool is local-id, every block is exclusively
+        # owned, and the engine only ever dispatches the m=0 table push.
+        m = 4 if engine.mesh is None else 0
+        mv = {k: sds((m,)) for k in tables_sds} if m else {}
+        points.append(EntryPoint(
+            name=f"cache_fixup[slots={slots},m={m}]", family="cache_fixup",
+            fn=c.fixup(slots, m),
+            args=(slot_caches_sds(), tables_sds, mv, mv),
+            carries=(0,), tags=hot))
     # the scan signatures carry the resilience state: a (slots,) bool
     # poisoned flag always, plus the fault-injection countdown vector when
     # the engine's FaultPlan compiles logit faults in — tracing the guarded
@@ -373,7 +411,7 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
             points.append(EntryPoint(
                 name=f"spec_scan[n={n},slots={slots}]", family="spec_scan",
                 fn=c.spec_scan(n, slots),
-                args=(params_sds, caches_sds(slots), sds((slots,)),
+                args=(params_sds, slot_caches_sds(), sds((slots,)),
                       sds((slots,), jnp.bool_), sds((slots,)),
                       sds((slots,), jnp.float32), sds((), jnp.bool_),
                       key_sds, sds((slots, drafter.history)),
@@ -383,7 +421,7 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
             points.append(EntryPoint(
                 name=f"scan[n={n},slots={slots}]", family="scan",
                 fn=c.scan(n, slots),
-                args=(params_sds, caches_sds(slots), sds((slots,)),
+                args=(params_sds, slot_caches_sds(), sds((slots,)),
                       sds((slots,), jnp.bool_), sds((slots,)),
                       sds((slots,), jnp.float32), sds((), jnp.bool_),
                       key_sds, sds((slots,), jnp.bool_)) + fin,

@@ -205,6 +205,107 @@ def init_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
             "step": jnp.zeros((batch,), jnp.int32)}
 
 
+# Paged KV ------------------------------------------------------------------
+#
+# The paged layout splits each layer's ring allocation into fixed PAGE_SIZE-
+# row blocks living in a pool, addressed through a per-slot block table:
+#   shared pool (single-device):  pk/pv (P, H, page, D), table (B, nb) holds
+#       GLOBAL block ids — slots may reference the same block (prefix
+#       sharing, refcounted copy-on-write on the host side).
+#   local pool (under a mesh):    pk/pv (B, nb+1, H, page, D), table (B, nb)
+#       holds LOCAL ids — no cross-slot references, so the pool shards over
+#       the slot axis and decode stays collective-free (gather/scatter are
+#       one-hot selects, the `_dyn_update` trick, never dynamic gathers).
+# Both carry one spare block per slot (the scratch block): freed slots park
+# their whole table on it so the decode scan's unconditional ring writes for
+# dead rows land somewhere never read.
+#
+# Decode gathers the table into a contiguous (B, H, nb*page, D) view, runs
+# the UNCHANGED ring attention (same kernel, same tiling, same masks — the
+# view width equals the contiguous allocation exactly, which is why
+# PAGE_SIZE divides every `cache_allocation`), and scatters the whole view
+# back. Bitwise identity with the contiguous engine falls out by
+# construction; the cost is a pool-sized copy per step, the same O(cache)
+# traffic the `_dyn_update` select already pays.
+
+PAGE_SIZE = 16   # rows per block == the bf16 sublane tile `_round_capacity`
+                 # rounds to, so every ring allocation is block-divisible
+
+
+def paged_num_blocks(cfg: AttentionLayerCfg, max_len: int,
+                     lookahead: int = 0, page: int = PAGE_SIZE) -> int:
+    """Blocks per slot for one layer's ring. The allocation must tile
+    exactly — true for every sparse ring (`_round_capacity` quantum 16/64)
+    and for dense caches whenever max_len is a multiple of 16."""
+    alloc = cache_allocation(cfg, max_len, lookahead)
+    if alloc % page:
+        raise ValueError(
+            f"paged KV needs page-divisible allocations: {alloc} rows "
+            f"% {page} != 0 (pick max_len a multiple of {page})")
+    return alloc // page
+
+
+def init_paged_kv_cache(cfg: AttentionLayerCfg, batch: int, max_len: int,
+                        dtype=jnp.bfloat16, lookahead: int = 0,
+                        page: int = PAGE_SIZE, shared_pool: bool = True):
+    """Paged twin of `init_kv_cache`. shared_pool picks the global-id layout
+    (block sharing possible) vs the slot-local layout (mesh-shardable).
+    Tables start at the identity mapping: slot s owns its home blocks, so a
+    freshly-initialized paged cache gathers to exactly `init_kv_cache`'s
+    zeros."""
+    nb = paged_num_blocks(cfg, max_len, lookahead, page)
+    nbp = nb + 1                                   # + per-slot scratch block
+    hkv, d = cfg.num_kv_heads, cfg.head_dim
+    if shared_pool:
+        shape = (batch * nbp, hkv, page, d)
+        table = (jnp.arange(batch, dtype=jnp.int32)[:, None] * nbp
+                 + jnp.arange(nb, dtype=jnp.int32)[None, :])
+    else:
+        shape = (batch, nbp, hkv, page, d)
+        table = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32),
+                                 (batch, nb)).astype(jnp.int32)
+    return {"pk": jnp.zeros(shape, dtype), "pv": jnp.zeros(shape, dtype),
+            "table": table, "step": jnp.zeros((batch,), jnp.int32)}
+
+
+def paged_gather(pool, table):
+    """Contiguous (B, H, nb*page, D) view of each slot's blocks."""
+    from repro.kernels import swat_decode as _sd
+    _sd.record_paged_fallback(
+        table.shape[-1], pool.shape[-2],
+        "table resolved outside the kernel: materialized gather-view "
+        "decode (pool-sized copy per step) instead of in-kernel gather")
+    if pool.ndim == 4:    # shared pool (P, H, page, D), global ids
+        blocks = pool[table]                            # (B, nb, H, page, D)
+    else:                 # local pool (B, nbp, H, page, D), local ids
+        nbp = pool.shape[1]
+        hot = (table[..., None]
+               == jnp.arange(nbp, dtype=jnp.int32))     # (B, nb, nbp)
+        # one-hot select, not a gather: exact in any dtype (one nonzero
+        # term per output) and partitionable under slot sharding
+        blocks = jnp.einsum("bnp,bphkd->bnhkd", hot.astype(pool.dtype), pool)
+    b, nb, h, page, d = blocks.shape
+    return blocks.transpose(0, 2, 1, 3, 4).reshape(b, h, nb * page, d)
+
+
+def paged_scatter(pool, table, view):
+    """Write a (B, H, nb*page, D) contiguous view back through the table.
+    Duplicate table entries (shared blocks, parked scratch rows) receive
+    value-identical or never-read writes, so scatter order is immaterial."""
+    b, h, rows, d = view.shape
+    nb = table.shape[-1]
+    page = rows // nb
+    blocks = (view.reshape(b, h, nb, page, d)
+              .transpose(0, 2, 1, 3, 4).astype(pool.dtype))  # (B,nb,H,pg,D)
+    if pool.ndim == 4:
+        return pool.at[table].set(blocks)
+    nbp = pool.shape[1]
+    hot = (table[..., None] == jnp.arange(nbp, dtype=jnp.int32))  # (B,nb,nbp)
+    upd = jnp.einsum("bnp,bnhkd->bphkd", hot.astype(pool.dtype), blocks)
+    written = jnp.any(hot, axis=1)                                # (B, nbp)
+    return jnp.where(written[:, :, None, None, None], upd, pool)
+
+
 def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
                      impl: str = "ref", lookahead: int = 0):
     """T-token decode. x: (B, T, Dm). Ring insertion at (step mod cap) for
@@ -227,20 +328,36 @@ def attention_decode(params: Params, cfg: AttentionLayerCfg, x, cache, *,
         pos = step[:, None, None] + jnp.arange(t, dtype=jnp.int32)  # (B,1,T)
         q = apply_rope(q, pos, cfg.rope_theta)
         k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    paged = "table" in cache
+    if paged:
+        # contiguous view of the block table; width == the contiguous
+        # allocation, so everything below is bit-for-bit the ring path
+        k_arr = paged_gather(cache["pk"], cache["table"])
+        v_arr = paged_gather(cache["pv"], cache["table"])
+    else:
+        k_arr, v_arr = cache["k"], cache["v"]
     # rotate and mask at the LOGICAL capacity: the allocation may carry a
     # tile-rounding tail of zero rows that must never be written or attended
     # (otherwise the rounding would silently widen the attention window)
-    cap = cache_capacity(cfg, cache["k"].shape[2], lookahead)
+    cap = cache_capacity(cfg, k_arr.shape[2], lookahead)
     g = cfg.spec.num_global if cfg.spec.is_sparse else 0
     assert t == 1 or not cfg.spec.is_sparse \
         or cap - g >= cfg.spec.window + t, (
             f"T={t} decode on a {cap - g}-row ring would evict in-window "
             "tokens: allocate caches with lookahead >= T-1")
     out, k_cache, v_cache = kops.decode_attention(
-        q, cache["k"], cache["v"], None, cfg.spec, impl=impl,
+        q, k_arr, v_arr, None, cfg.spec, impl=impl,
         new_kv=(k_new, v_new), pos=step, ring_cap=cap)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
-    new_cache = {"k": k_cache, "v": v_cache, "step": step + t}
+    if paged:
+        new_cache = {**cache,
+                     "pk": paged_scatter(cache["pk"], cache["table"],
+                                         k_cache),
+                     "pv": paged_scatter(cache["pv"], cache["table"],
+                                         v_cache),
+                     "step": step + t}
+    else:
+        new_cache = {"k": k_cache, "v": v_cache, "step": step + t}
     return out @ params["wo"], new_cache
 
 

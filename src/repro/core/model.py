@@ -36,11 +36,24 @@ def _dtype(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
 
-def attn_cfg(cfg: ModelConfig, kind: str, cross: bool = False
-             ) -> L.AttentionLayerCfg:
+def attn_cfg(cfg: ModelConfig, kind: str, cross: bool = False,
+             index: Optional[int] = None) -> L.AttentionLayerCfg:
+    """index: position within cfg.layer_pattern; when cfg.window_schedule
+    names a window there, it overrides this layer's attention spec (sparse
+    specs keep num_global/softcap; dense specs become causal swat windows).
+    Cache capacities follow the overridden spec, so scheduled layers
+    allocate their own ring shapes."""
     spec = cfg.local_attention if kind == "local_attn" else cfg.attention
     if cross:
         spec = AttentionSpec(kind="dense", causal=False)
+    elif (index is not None and cfg.window_schedule is not None
+          and cfg.window_schedule[index] is not None):
+        w = cfg.window_schedule[index]
+        if spec.is_sparse:
+            spec = dataclasses.replace(spec, window=w)
+        else:
+            spec = AttentionSpec(kind="swat", window=w, causal=spec.causal,
+                                 softcap=spec.softcap)
     return L.AttentionLayerCfg(
         d_model=cfg.d_model, num_heads=cfg.num_heads,
         num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
@@ -50,14 +63,16 @@ def attn_cfg(cfg: ModelConfig, kind: str, cross: bool = False
 
 # ------------------------------------------------------------------ init ---
 
-def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+def _init_layer(key, cfg: ModelConfig, kind: str,
+                index: Optional[int] = None) -> Params:
     dt = _dtype(cfg)
     ks = jax.random.split(key, 4)
     p: Params = {"norm1": L.init_rmsnorm(cfg.d_model)}
     if kind.startswith("mamba"):
         p["mixer"] = S.init_mamba(ks[0], cfg.d_model, cfg.ssm, dtype=dt)
     else:
-        p["mixer"] = L.init_attention(ks[0], attn_cfg(cfg, kind), dtype=dt)
+        p["mixer"] = L.init_attention(ks[0], attn_cfg(cfg, kind, index=index),
+                                      dtype=dt)
     if kind == "xattn":
         p["norm_x"] = L.init_rmsnorm(cfg.d_model)
         p["cross"] = L.init_attention(ks[1], attn_cfg(cfg, kind, cross=True),
@@ -73,7 +88,7 @@ def _init_layer(key, cfg: ModelConfig, kind: str) -> Params:
 
 def _init_super_block(key, cfg: ModelConfig, pattern) -> Params:
     keys = jax.random.split(key, len(pattern))
-    return {f"l{i}": _init_layer(keys[i], cfg, kind)
+    return {f"l{i}": _init_layer(keys[i], cfg, kind, index=i)
             for i, kind in enumerate(pattern)}
 
 
@@ -106,21 +121,22 @@ def init_model(key, cfg: ModelConfig) -> Params:
 def cfg_encoder(cfg: ModelConfig) -> ModelConfig:
     """Whisper encoder: bidirectional self-attention, no causality."""
     return dataclasses.replace(
-        cfg, layer_pattern=("attn",), use_rope=False,
+        cfg, layer_pattern=("attn",), use_rope=False, window_schedule=None,
         attention=dataclasses.replace(cfg.attention, causal=False))
 
 
 # --------------------------------------------------------------- forward ---
 
 def _apply_layer(p: Params, cfg: ModelConfig, kind: str, x, *,
-                 enc_out=None, impl: str, positions=None):
+                 enc_out=None, impl: str, positions=None,
+                 index: Optional[int] = None):
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind.startswith("mamba"):
         x = x + S.mamba_block(p["mixer"], h, cfg.ssm,
                               chunk=cfg.ssm.chunk_size)
     else:
-        x = x + L.attention_layer(p["mixer"], attn_cfg(cfg, kind), h,
-                                  positions=positions, impl=impl)
+        x = x + L.attention_layer(p["mixer"], attn_cfg(cfg, kind, index=index),
+                                  h, positions=positions, impl=impl)
     if kind == "xattn":
         h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
         x = x + L.attention_layer(p["cross"], attn_cfg(cfg, kind, cross=True),
@@ -160,7 +176,7 @@ def _stack_forward(blocks: Params, cfg: ModelConfig, x, pattern, *,
         x, aux = carry
         for i, kind in enumerate(pattern):
             x, a = _apply_layer(blk_p[f"l{i}"], cfg, kind, x,
-                                enc_out=enc_out, impl=impl)
+                                enc_out=enc_out, impl=impl, index=i)
             aux = aux + a
         return (constrain(x), aux), None
 
@@ -261,12 +277,13 @@ def loss_fn(params: Params, cfg: ModelConfig, batch, *,
 # --------------------------------------------------------------- serving ---
 
 def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                      enc_len: int = 0, lookahead: int = 0):
+                      enc_len: int = 0, lookahead: int = 0,
+                      index: Optional[int] = None):
     dt = _dtype(cfg)
     if kind.startswith("mamba"):
         return S.init_mamba_cache(cfg.d_model, cfg.ssm, batch, dtype=dt)
-    cache = L.init_kv_cache(attn_cfg(cfg, kind), batch, max_len, dtype=dt,
-                            lookahead=lookahead)
+    cache = L.init_kv_cache(attn_cfg(cfg, kind, index=index), batch, max_len,
+                            dtype=dt, lookahead=lookahead)
     if kind == "xattn":
         shape = (batch, cfg.num_kv_heads, max(enc_len, 1),
                  cfg.resolved_head_dim)
@@ -282,20 +299,76 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     evicts an in-window token (`layers.cache_capacity`)."""
     def one(_):
         return {f"l{i}": _layer_cache_init(cfg, kind, batch, max_len,
-                                           enc_len, lookahead)
+                                           enc_len, lookahead, index=i)
                 for i, kind in enumerate(cfg.layer_pattern)}
     caches = jax.vmap(one)(jnp.arange(cfg.num_super_blocks))
     return caches
 
 
+def paged_layout(cfg: ModelConfig, max_len: int, lookahead: int = 0,
+                 page: int = 0) -> Dict[int, Dict[str, int]]:
+    """Block geometry per attention-bearing layer_pattern position: the
+    host-side contract between `init_paged_caches` and the serving block
+    allocator. Keys are pattern indices; values carry the page size, blocks
+    per slot (nb), logical capacity, pinned-global count g and ring modulus
+    — everything the allocator needs to map token positions to blocks."""
+    page = page or L.PAGE_SIZE
+    out: Dict[int, Dict[str, int]] = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind.startswith("mamba"):
+            continue
+        acfg = attn_cfg(cfg, kind, index=i)
+        cap = L.cache_capacity(acfg, max_len, lookahead)
+        g = acfg.spec.num_global if acfg.spec.is_sparse else 0
+        out[i] = {"page": page,
+                  "nb": L.paged_num_blocks(acfg, max_len, lookahead, page),
+                  "cap": cap, "g": g, "ring": cap - g}
+    return out
+
+
+def _layer_cache_init_paged(cfg: ModelConfig, kind: str, batch: int,
+                            max_len: int, enc_len: int = 0,
+                            lookahead: int = 0, index: Optional[int] = None,
+                            shared_pool: bool = True):
+    dt = _dtype(cfg)
+    if kind.startswith("mamba"):
+        return S.init_mamba_cache(cfg.d_model, cfg.ssm, batch, dtype=dt)
+    cache = L.init_paged_kv_cache(attn_cfg(cfg, kind, index=index), batch,
+                                  max_len, dtype=dt, lookahead=lookahead,
+                                  shared_pool=shared_pool)
+    if kind == "xattn":
+        shape = (batch, cfg.num_kv_heads, max(enc_len, 1),
+                 cfg.resolved_head_dim)
+        cache["xk"] = jnp.zeros(shape, dt)
+        cache["xv"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int = 0, lookahead: int = 0,
+                      shared_pool: bool = True) -> Params:
+    """Paged twin of `init_caches`: attention layers hold block pools +
+    tables (`layers.init_paged_kv_cache`), mamba/xattn leaves are unchanged.
+    Identity tables make a fresh paged cache gather-equal to a fresh
+    contiguous one."""
+    def one(_):
+        return {f"l{i}": _layer_cache_init_paged(
+                    cfg, kind, batch, max_len, enc_len, lookahead,
+                    index=i, shared_pool=shared_pool)
+                for i, kind in enumerate(cfg.layer_pattern)}
+    return jax.vmap(one)(jnp.arange(cfg.num_super_blocks))
+
+
 def _apply_layer_decode(p, cfg, kind, x, cache, *, enc_out=None,
-                        impl: str = "ref", lookahead: int = 0):
+                        impl: str = "ref", lookahead: int = 0,
+                        index: Optional[int] = None):
     h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
     if kind.startswith("mamba"):
         y, new_cache = S.mamba_decode(p["mixer"], h, cache, cfg.ssm)
     else:
-        y, new_cache = L.attention_decode(p["mixer"], attn_cfg(cfg, kind), h,
-                                          cache, impl=impl,
+        y, new_cache = L.attention_decode(p["mixer"],
+                                          attn_cfg(cfg, kind, index=index),
+                                          h, cache, impl=impl,
                                           lookahead=lookahead)
     x = x + y
     if kind == "xattn":
@@ -347,7 +420,7 @@ def decode_step(params: Params, cfg: ModelConfig, batch, caches, *,
         for i, kind in enumerate(cfg.layer_pattern):
             x, nc = _apply_layer_decode(blk_p[f"l{i}"], cfg, kind, x,
                                         blk_cache[f"l{i}"], impl=dec_impl,
-                                        lookahead=lookahead)
+                                        lookahead=lookahead, index=i)
             new_caches[f"l{i}"] = nc
         return L.with_activation_constraint(x, act_sharding), new_caches
 
@@ -391,7 +464,7 @@ def prefill(params: Params, cfg: ModelConfig, batch, max_len: int, *,
                 cache = _mamba_prefill_cache(p["mixer"], h, cfg,
                                              lengths=lengths)
             else:
-                acfg = attn_cfg(cfg, kind)
+                acfg = attn_cfg(cfg, kind, index=i)
                 y = L.attention_layer(p["mixer"], acfg, h, impl=impl)
                 cache = L.prefill_kv_cache(p["mixer"], acfg, h, max_len,
                                            lengths=lengths,
@@ -470,8 +543,8 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch, caches, pos0,
             p = blk_p[f"l{i}"]
             h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
             y, nc = L.attention_prefill_chunk(
-                p["mixer"], attn_cfg(cfg, kind), h, blk_cache[f"l{i}"],
-                pos0, lengths, lookahead=lookahead)
+                p["mixer"], attn_cfg(cfg, kind, index=i), h,
+                blk_cache[f"l{i}"], pos0, lengths, lookahead=lookahead)
             x = x + y
             if "moe" in p:
                 h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)

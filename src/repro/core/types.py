@@ -123,6 +123,13 @@ class ModelConfig:
     layer_pattern: Tuple[str, ...] = ("attn",)
     attention: AttentionSpec = AttentionSpec()
     local_attention: Optional[AttentionSpec] = None   # for "local_attn" layers
+    # Per-layer window schedule, one entry per layer_pattern position (the
+    # SWAA / gemma2 mixed local-global regime). None entries inherit the
+    # layer kind's spec unchanged; an int w overrides that position's
+    # attention to a causal w-window (sparse specs keep their
+    # num_global/softcap, dense specs become plain swat windows). Cache
+    # shapes follow: each position allocates its own ring capacity.
+    window_schedule: Optional[Tuple[Optional[int], ...]] = None
     moe: MoESpec = MoESpec()
     ssm: SSMSpec = SSMSpec()
     qkv_bias: bool = False                 # qwen2.5
@@ -145,6 +152,13 @@ class ModelConfig:
             f"pattern {self.layer_pattern}")
         if self.num_heads:
             assert self.num_heads % max(self.num_kv_heads, 1) == 0
+        if self.window_schedule is not None:
+            assert len(self.window_schedule) == len(self.layer_pattern), (
+                f"{self.name}: window_schedule length "
+                f"{len(self.window_schedule)} != layer_pattern length "
+                f"{len(self.layer_pattern)}")
+            assert all(w is None or w > 0 for w in self.window_schedule), \
+                "window_schedule entries must be None or a positive window"
 
     @property
     def resolved_head_dim(self) -> int:
@@ -164,9 +178,12 @@ class ModelConfig:
     def sub_quadratic(self) -> bool:
         """True when prefill cost is o(N^2): SSM/hybrid or windowed attention
         on every attention layer."""
-        for kind in self.layer_pattern:
+        for i, kind in enumerate(self.layer_pattern):
             if kind.startswith("mamba"):
                 continue
+            if (self.window_schedule is not None
+                    and self.window_schedule[i] is not None):
+                continue  # scheduled to a finite window at this position
             spec = (self.local_attention if kind == "local_attn"
                     else self.attention)
             if spec is None or not spec.is_sparse:

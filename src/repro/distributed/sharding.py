@@ -50,6 +50,11 @@ _CACHE_RULES: List[Tuple[str, List[Tuple[int, Sequence[Any]]]]] = [
     (r"(^|/)(k|v|xk|xv)$", [(0, (("pod", "data"), "data")),
                             (1, ("model",)),
                             (2, ("model", "data", ("model", "data")))]),
+    # paged pool (local-id mode): (slots, nb+1, H, page, D) — slot dim rides
+    # the batch axes, heads ride 'model'; page rows must never split
+    (r"(^|/)(pk|pv)$",     [(0, (("pod", "data"), "data")),
+                            (2, ("model",))]),
+    (r"(^|/)table$",       [(0, (("pod", "data"), "data"))]),
     (r"conv$",             [(0, (("pod", "data"), "data")),
                             (2, ("model",))]),
     (r"ssm$",              [(0, (("pod", "data"), "data")),

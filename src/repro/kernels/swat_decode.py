@@ -68,25 +68,43 @@ def consume_pad_events() -> list:
     return out
 
 
-def _warn_pad(w: int, block_kv: int) -> None:
+def _warn_pad(w: int, requested: int, chosen: int) -> None:
     """One-time (per W) warning for the pad-and-copy fallback: padding the
     cache to a block multiple COPIES the whole cache every decode call —
     engine ring allocations are pre-rounded to avoid it, so hitting this
-    means an ad-hoc capacity leaked into a hot path. Every distinct W is
+    means an ad-hoc capacity leaked into a hot path. Names both the
+    requested block and the block the kernel actually RUNS with, so the log
+    line alone says what the padded grid looks like. Every distinct W is
     also recorded as a structured event for the analyzer (the log dedups
     per process; the event buffer dedups per drain)."""
-    if not any(e["w"] == w for e in _PAD_EVENTS):
-        _PAD_EVENTS.append({"w": w, "block_kv": block_kv,
+    if not any(e.get("kind") == "pad" and e["w"] == w for e in _PAD_EVENTS):
+        _PAD_EVENTS.append({"kind": "pad", "w": w, "block_kv": requested,
+                            "chosen_block": chosen,
+                            "padded_w": -(-w // chosen) * chosen,
                             "min_block": _MIN_BLOCK_KV})
     if w in _PAD_WARNED:
         return
     _PAD_WARNED.add(w)
     logger.warning(
         "swat_decode: cache capacity W=%d is not tileable by block_kv=%d "
-        "(no divisor >= %d): falling back to jnp.pad, which copies the "
-        "ENTIRE cache on every call. Round the allocation "
-        "(layers.cache_allocation) if this is a hot path.", w, block_kv,
-        _MIN_BLOCK_KV)
+        "(no divisor >= %d): running with block_kv=%d over a jnp.pad-ed "
+        "%d-row cache, which copies the ENTIRE cache on every call. Round "
+        "the allocation (layers.cache_allocation) if this is a hot path.",
+        w, requested, _MIN_BLOCK_KV, chosen, -(-w // chosen) * chosen)
+
+
+def record_paged_fallback(nb: int, page: int, reason: str) -> None:
+    """Structured event for paged-KV decode taking the materialized
+    gather-view path instead of an in-kernel block gather (the table is
+    resolved OUTSIDE the kernel, costing a pool-sized copy per step).
+    Shares the `_PAD_EVENTS` channel so the analyzer surfaces it next to
+    the pad-and-copy fallback — both are 'the hot path is copying the
+    cache' findings. Deduped per (nb, page) per drain."""
+    if any(e.get("kind") == "paged_gather" and e.get("nb") == nb
+           and e.get("page") == page for e in _PAD_EVENTS):
+        return
+    _PAD_EVENTS.append({"kind": "paged_gather", "nb": nb, "page": page,
+                        "reason": reason})
 
 
 def _pmod(x, m: int):
@@ -265,9 +283,10 @@ def swat_decode(q, k_cache, v_cache, pos, *,
         f"{t} new tokens would overwrite each other in a {ring}-row ring: "
         "allocate the cache with lookahead >= T-1")
     scale = float(d ** -0.5 if scale is None else scale)
+    requested_block = block_kv
     block_kv, needs_pad = decode_block_kv(w, block_kv)
     if needs_pad:
-        _warn_pad(w, block_kv)
+        _warn_pad(w, requested_block, block_kv)
         w_pad = -(-w // block_kv) * block_kv
         padw = ((0, 0), (0, 0), (0, w_pad - w), (0, 0))
         k_cache, v_cache = jnp.pad(k_cache, padw), jnp.pad(v_cache, padw)

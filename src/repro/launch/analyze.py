@@ -72,6 +72,21 @@ def main():
         if label == "tp_2x2":
             return ServingEngine(dense, params, batch_slots=2, max_len=128,
                                  scan_steps=4, mesh=parse_mesh("2x2"))
+        if label == "paged_single":
+            # paged pool + block tables on the swat config: admission is
+            # the reshape-scatter insert, decode reads through the
+            # gather-view — same math, different residency
+            return ServingEngine(swat, swat_params, batch_slots=2,
+                                 max_len=128, scan_steps=4,
+                                 kv_layout="paged")
+        if label == "paged_slot_parallel_4x1":
+            # paged decode on the strictest topology: the local-id pool
+            # shards over the slot axis and the scan must stay
+            # collective-free — block gather/scatter is one-hot einsum
+            # against the slot-local table shard, never cross-slot
+            return ServingEngine(dense, params, batch_slots=4, max_len=128,
+                                 scan_steps=4, mesh=parse_mesh("4x1"),
+                                 kv_layout="paged")
         if label == "chaos_4x1":
             # the fault-injected program on the strictest topology: logit
             # poison compiled into a slot-parallel decode scan must STILL
@@ -85,7 +100,8 @@ def main():
         raise SystemExit(f"unknown engine label: {label}")
 
     matrix = ["single", "swat_pallas", "spec_k2", "slot_parallel_4x1",
-              "tp_2x2", "chaos_4x1"]
+              "tp_2x2", "chaos_4x1", "paged_single",
+              "paged_slot_parallel_4x1"]
     if args.engines:
         matrix = [x.strip() for x in args.engines.split(",") if x.strip()]
 

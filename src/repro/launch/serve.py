@@ -94,6 +94,15 @@ def main():
                     help="fault drill: make the pallas decode kernel "
                          "fail dispatch; the engine must fall back to "
                          "the reference impl and finish the batch")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="cache residency: per-slot rings or the paged "
+                         "block pool + tables (see serving README)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="prefill each admission batch's common prompt "
+                         "prefix once and block-share it (paged, "
+                         "single-device); demoed with a shared system "
+                         "prompt across all requests")
     args = ap.parse_args()
 
     import jax
@@ -130,13 +139,27 @@ def main():
         faults=plan,
         max_prompt_len=args.max_prompt_len or None,
         max_pending=args.max_pending or None,
-        spec_min_acceptance=args.spec_min_acceptance)
+        spec_min_acceptance=args.spec_min_acceptance,
+        kv_layout=args.kv_layout, share_prefix=args.share_prefix)
     rng = np.random.RandomState(0)
-    reqs = [Request(rid=i, prompt=rng.randint(
-        0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
-        max_new_tokens=args.new_tokens, temperature=args.temperature,
-        deadline=args.deadline or None)
-        for i in range(args.requests)]
+    if args.share_prefix:
+        # shared-prefix demo workload: one system prompt, short suffixes
+        sys_prompt = rng.randint(0, cfg.vocab_size,
+                                 (max(args.prompt_len - 16, 16),)
+                                 ).astype(np.int32)
+        prompts = [np.concatenate(
+            [sys_prompt, rng.randint(0, cfg.vocab_size, (16,)
+                                     ).astype(np.int32)])
+            for _ in range(args.requests)]
+    else:
+        prompts = [rng.randint(0, cfg.vocab_size, (args.prompt_len,)
+                               ).astype(np.int32)
+                   for _ in range(args.requests)]
+    reqs = [Request(rid=i, prompt=prompts[i],
+                    max_new_tokens=args.new_tokens,
+                    temperature=args.temperature,
+                    deadline=args.deadline or None)
+            for i in range(args.requests)]
     t0 = time.time()
     try:
         results = engine.run(reqs)
@@ -156,6 +179,16 @@ def main():
           f"prefill_chunk={args.prefill_chunk}, {mdesc}{spec})")
     print(f"[serve] cache bytes @max_len: "
           f"{ring_cache_bytes(cfg, args.slots, args.max_len) / 1e6:.1f}MB")
+    if args.kv_layout == "paged":
+        ps = engine.paged_stats()
+        line = (f"[serve] paged pool: {ps['blocks_in_use']}/"
+                f"{ps['blocks_total']} blocks in use")
+        if args.share_prefix:
+            line += (f"; prefixes shared="
+                     f"{engine.stats['prefill_prefix_shared']}, prefill "
+                     f"tokens computed="
+                     f"{engine.stats['prefill_tokens_computed']}")
+        print(line)
     by_status = {}
     for r in results:
         by_status[r.status] = by_status.get(r.status, 0) + 1

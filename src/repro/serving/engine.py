@@ -85,6 +85,12 @@ class Request:
     # boundaries (the host-sync quantum), so expiry resolution is one
     # decode block — an expired request finalizes with what it has.
     deadline: Optional[float] = None
+    # infrastructure-failure retries: a request whose slot died with status
+    # "failed" (cache donation consumed) is readmitted through the normal
+    # queue up to this many times before it finalizes as failed. Retries
+    # restart from the prompt — partial tokens from the dead slot are
+    # discarded, never stitched.
+    max_retries: int = 0
 
     def __post_init__(self):
         # normalize ONCE at the boundary: a (1, L) / list-of-lists prompt
@@ -103,6 +109,7 @@ class Result:
     tokens: List[int]
     status: str = "ok"           # one of STATUSES
     reason: str = ""             # human-readable detail for status != ok
+    retries: int = 0             # readmissions consumed (see max_retries)
 
     @property
     def ok(self) -> bool:
@@ -137,9 +144,16 @@ class _Compiled:
                  top_k: int, mesh=None, profile: str = "tp",
                  tokens_per_step: int = 1, speculative: int = 0,
                  draft: Optional[NGramDrafter] = None, donate: bool = True,
-                 faults: FaultPlan = FaultPlan()):
+                 faults: FaultPlan = FaultPlan(),
+                 kv_layout: str = "contiguous"):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
+        # "paged": slot caches hold block pools + tables instead of
+        # per-slot contiguous rings; decode gathers a ring VIEW per layer
+        # (bitwise the contiguous kernel — PAGE_SIZE divides every
+        # allocation), and admission/COW address blocks through tables
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
         self.tokens_per_step = tokens_per_step
         self.lookahead = tokens_per_step - 1
         self.speculative = speculative
@@ -169,12 +183,30 @@ class _Compiled:
         self._scan_fns: Dict[Tuple[int, int], Any] = {}
         self._spec_fns: Dict[Tuple[int, int], Any] = {}
         self._init_fns: Dict[int, Any] = {}
+        self._slot_init_fns: Dict[int, Any] = {}
+        self._insert_paged_fns: Dict[Tuple[int, int], Any] = {}
+        self._fixup_fns: Dict[Tuple[int, int], Any] = {}
+        self._bcast_fns: Dict[int, Any] = {}
 
     # ------------------------------------------------------- sharding maps --
     def cache_sharding(self, n: int):
         shapes = jax.eval_shape(
             lambda: Mod.init_caches(self.cfg, n, self.max_len,
                                     lookahead=self.lookahead))
+        return self._Sh.cache_sharding(shapes, self.mesh)
+
+    def slot_cache_sharding(self, slots: int):
+        """Sharding of the engine's SLOT caches — the decode-scan carry.
+        Contiguous engines: same as cache_sharding. Paged engines: the pool
+        leaves (pk/pv/table) carry their own rules — under a mesh the pool
+        is per-slot (local block ids), slot dim over the batch axes, so
+        slot-parallel paged decode stays collective-free."""
+        if not self.paged:
+            return self.cache_sharding(slots)
+        shapes = jax.eval_shape(
+            lambda: Mod.init_paged_caches(self.cfg, slots, self.max_len,
+                                          lookahead=self.lookahead,
+                                          shared_pool=self.mesh is None))
         return self._Sh.cache_sharding(shapes, self.mesh)
 
     def batch_sharding(self, shapes, n: int, slot_dim: int = 0):
@@ -342,6 +374,137 @@ class _Compiled:
                 out_shardings=out_sh)
         return self._init_fns[n]()
 
+    # -------------------------------------------------------------- paged --
+    def fresh_slot_caches(self, slots: int):
+        """The engine's slot caches: paged pools+tables for kv_layout=
+        'paged', plain contiguous rings otherwise. Prefill always runs
+        contiguous — rows paginate at insert."""
+        if not self.paged:
+            return self.fresh_caches(slots)
+        if slots not in self._slot_init_fns:
+            out_sh = (None if self.mesh is None
+                      else self.slot_cache_sharding(slots))
+            self._slot_init_fns[slots] = jax.jit(
+                lambda: Mod.init_paged_caches(
+                    self.cfg, slots, self.max_len, lookahead=self.lookahead,
+                    shared_pool=self.mesh is None),
+                out_shardings=out_sh)
+        return self._slot_init_fns[slots]()
+
+    def insert_paged(self, slots: int, n: int):
+        """Paged admission: reshape n freshly prefilled CONTIGUOUS rows
+        into page blocks, scatter them to each row's table blocks, and push
+        the full host table mirror atomically in the same dispatch (the
+        staleness contract in serving/paged.py). Shared-prefix admissions
+        point several rows at the same block ids — the duplicate scatters
+        carry bitwise-identical content by the shareable-block invariant,
+        so whichever lands is exact."""
+        key = (slots, n)
+        if key not in self._insert_paged_fns:
+            def fn(full, one, idx, tables):
+                out = {}
+                for li, fc in full.items():
+                    oc = one[li]
+                    if not (isinstance(fc, dict) and "pk" in fc):
+                        out[li] = jax.tree.map(
+                            lambda f, o: f.at[:, idx].set(o.astype(f.dtype)),
+                            fc, oc)
+                        continue
+                    nb = fc["table"].shape[-1]
+                    page = fc["pk"].shape[-2]
+                    tbl = tables[li]
+                    nc = dict(fc)
+                    sb, nn, hh, cap, dd = oc["k"].shape
+
+                    def blocks(a):
+                        return a.reshape(sb, nn, hh, nb, page, dd
+                                         ).transpose(0, 1, 3, 2, 4, 5)
+                    if fc["pk"].ndim == 5:       # shared global-id pool
+                        dest = tbl[idx].reshape(-1)
+                        for pkey, ckey in (("pk", "k"), ("pv", "v")):
+                            blk = blocks(oc[ckey]).reshape(
+                                sb, nn * nb, hh, page, dd)
+                            nc[pkey] = fc[pkey].at[:, dest].set(
+                                blk.astype(fc[pkey].dtype))
+                    else:                         # per-slot local-id pool
+                        for pkey, ckey in (("pk", "k"), ("pv", "v")):
+                            nc[pkey] = fc[pkey].at[:, idx, :nb].set(
+                                blocks(oc[ckey]).astype(fc[pkey].dtype))
+                    nc["table"] = jnp.broadcast_to(
+                        tbl[None].astype(fc["table"].dtype),
+                        fc["table"].shape)
+                    nc["step"] = fc["step"].at[:, idx].set(
+                        oc["step"].astype(fc["step"].dtype))
+                    for extra in ("xk", "xv"):
+                        if extra in fc:
+                            nc[extra] = fc[extra].at[:, idx].set(
+                                oc[extra].astype(fc[extra].dtype))
+                    out[li] = nc
+                return out
+            don = self._donate(0)
+            if self.mesh is None:
+                self._insert_paged_fns[key] = jax.jit(fn, donate_argnums=don)
+            else:
+                self._insert_paged_fns[key] = jax.jit(
+                    fn,
+                    in_shardings=(self.slot_cache_sharding(slots),
+                                  self.cache_sharding(n), self._rep,
+                                  self._rep),
+                    out_shardings=self.slot_cache_sharding(slots),
+                    donate_argnums=don)
+        return self._insert_paged_fns[key]
+
+    def fixup(self, slots: int, m: int):
+        """Pre-block paged maintenance: copy-on-write block moves (m (src,
+        dst) pairs per layer, padded with scratch self-moves) plus a
+        wholesale push of the host table mirror. dst ids are freshly
+        allocated, so the gather of the OLD pool before the scatter is
+        consistent — no move ever reads another move's destination."""
+        key = (slots, m)
+        if key not in self._fixup_fns:
+            def fn(caches, tables, srcs, dsts):
+                out = {}
+                for li, c in caches.items():
+                    if not (isinstance(c, dict) and "pk" in c):
+                        out[li] = c
+                        continue
+                    nc = dict(c)
+                    if m:
+                        s_, d_ = srcs[li], dsts[li]
+                        nc["pk"] = nc["pk"].at[:, d_].set(nc["pk"][:, s_])
+                        nc["pv"] = nc["pv"].at[:, d_].set(nc["pv"][:, s_])
+                    nc["table"] = jnp.broadcast_to(
+                        tables[li][None].astype(c["table"].dtype),
+                        c["table"].shape)
+                    out[li] = nc
+                return out
+            don = self._donate(0)
+            if self.mesh is None:
+                self._fixup_fns[key] = jax.jit(fn, donate_argnums=don)
+            else:
+                sh = self.slot_cache_sharding(slots)
+                self._fixup_fns[key] = jax.jit(
+                    fn, in_shardings=(sh, self._rep, self._rep, self._rep),
+                    out_shardings=sh, donate_argnums=don)
+        return self._fixup_fns[key]
+
+    def broadcast_prefix(self, n: int):
+        """Prefix-sharing prefill: replicate a 1-row prefix cache (and its
+        last-token logits) across n batch rows. jnp.repeat copies rows, so
+        every row starts bitwise the single-row prefill."""
+        if n not in self._bcast_fns:
+            def fn(c1, lg):
+                caches = jax.tree.map(lambda x: jnp.repeat(x, n, axis=1), c1)
+                return jnp.broadcast_to(lg, (n,) + lg.shape[1:]), caches
+            if self.mesh is None:
+                self._bcast_fns[n] = jax.jit(fn)
+            else:
+                logit_sh = self.batch_sharding(
+                    self._sds((n, self.cfg.vocab_size), jnp.float32), n)
+                self._bcast_fns[n] = jax.jit(
+                    fn, out_shardings=(logit_sh, self.cache_sharding(n)))
+        return self._bcast_fns[n]
+
     # ------------------------------------------------------------- decode --
     def scan(self, n: int, slots: int):
         key = (n, slots)
@@ -420,7 +583,7 @@ class _Compiled:
         don = self._donate(1)
         if self.mesh is None:
             return jax.jit(fn, donate_argnums=don)
-        cache_sh = self.cache_sharding(slots)
+        cache_sh = self.slot_cache_sharding(slots)
         veci = self.batch_sharding(self._sds((slots,)), slots)
         vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
         vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
@@ -606,7 +769,7 @@ class _Compiled:
         don = self._donate(1)            # ring caches: see _make_scan
         if self.mesh is None:
             return jax.jit(fn, donate_argnums=don)
-        cache_sh = self.cache_sharding(slots)
+        cache_sh = self.slot_cache_sharding(slots)
         veci = self.batch_sharding(self._sds((slots,)), slots)
         vecb = self.batch_sharding(self._sds((slots,), jnp.bool_), slots)
         vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
@@ -631,9 +794,11 @@ def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
                   tokens_per_step: int = 1, speculative: int = 0,
                   draft: Optional[NGramDrafter] = None,
                   donate: bool = True,
-                  faults: FaultPlan = FaultPlan()) -> _Compiled:
+                  faults: FaultPlan = FaultPlan(),
+                  kv_layout: str = "contiguous") -> _Compiled:
     return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
-                     tokens_per_step, speculative, draft, donate, faults)
+                     tokens_per_step, speculative, draft, donate, faults,
+                     kv_layout)
 
 
 class ServingEngine:
@@ -651,7 +816,10 @@ class ServingEngine:
                  spec_min_acceptance: float = 0.0,
                  spec_acceptance_window: int = 4,
                  spec_retry_blocks: int = 8,
-                 spec_resume_acceptance: Optional[float] = None):
+                 spec_resume_acceptance: Optional[float] = None,
+                 kv_layout: str = "contiguous",
+                 share_prefix: bool = False,
+                 share_min_prefix: int = 16):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
@@ -717,7 +885,21 @@ class ServingEngine:
         block and re-enables only if that block's acceptance reaches
         `spec_resume_acceptance` (default: same threshold) — the
         hysteresis that stops flapping. 0.0 (default) disables the
-        ladder."""
+        ladder.
+
+        kv_layout: "contiguous" (per-slot ring buffers, the historical
+        layout) or "paged" — slot caches become fixed-size PAGE_SIZE-row
+        blocks in a device pool addressed through per-slot block tables
+        (serving/paged.py). Every allocation tiles exactly into pages, so
+        the decode gather-view is bitwise the contiguous ring and tokens
+        are IDENTICAL across layouts; what pages buy is block-granular
+        bookkeeping — prefix sharing, copy-on-write, O(1) slot free.
+        share_prefix: paged single-device engines only — when an admitted
+        batch shares a token prefix of at least `share_min_prefix`
+        (PrefillPlan.prefix_len, the scheduler's radix-trie LCP) and
+        prefill chunking is on, the prefix prefills ONCE, broadcasts to
+        every row, and untouched prefix blocks are refcount-shared until
+        a ring write diverges them (copy-on-write)."""
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -739,12 +921,19 @@ class ServingEngine:
         self.faults = faults if faults is not None else FaultPlan()
         if self.faults.fail_pallas_dispatch:
             F.install_kernel_failure()
+        assert kv_layout in ("contiguous", "paged"), kv_layout
+        self.kv_layout = kv_layout
+        # block sharing needs the shared global-id pool (single device);
+        # sharded engines keep per-slot local ids, so sharing is a no-op
+        self.share_prefix = (bool(share_prefix) and kv_layout == "paged"
+                             and mesh is None)
+        self.share_min_prefix = max(1, share_min_prefix)
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
                                 profile, self.tokens_per_step,
                                 self.speculative,
                                 get_drafter(draft) if self.speculative
-                                else None, donate, self.faults)
+                                else None, donate, self.faults, kv_layout)
         self.drafter = self._c.drafter
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
@@ -767,8 +956,19 @@ class ServingEngine:
         self._cache_poison_applied: set = set()
         self._faults_fired: set = set()   # slots whose logit fault fired
         self._run_t0: Optional[float] = None
+        if kv_layout == "paged":
+            from repro.serving.paged import PagedManager
+            self._paged: Optional[PagedManager] = PagedManager(
+                Mod.paged_layout(cfg, max_len, self._c.lookahead),
+                batch_slots, mode="shared" if mesh is None else "local")
+        else:
+            self._paged = None
+        # next ring-write token position per slot (paged COW planning)
+        self._slot_pos = np.zeros((batch_slots,), np.int64)
+        self._retry_counts: Dict[int, int] = {}
+        self._readmit: List[Request] = []
 
-        self.caches = self._c.fresh_caches(batch_slots)
+        self.caches = self._c.fresh_slot_caches(batch_slots)
         self.slot_free = [True] * batch_slots
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_out: List[List[int]] = [[] for _ in range(batch_slots)]
@@ -793,7 +993,9 @@ class ServingEngine:
                       "draft_accepted": 0, "tokens_emitted": 0,
                       "quarantined": 0, "rejected": 0, "deadline": 0,
                       "failed": 0, "kernel_fallbacks": 0,
-                      "spec_autodisable": 0, "spec_resume": 0}
+                      "spec_autodisable": 0, "spec_resume": 0,
+                      "readmitted": 0, "prefill_tokens_computed": 0,
+                      "prefill_prefix_shared": 0}
 
     @property
     def acceptance_rate(self) -> float:
@@ -814,7 +1016,8 @@ class ServingEngine:
         """Finalize one request into self._completed (the ONLY result
         store — run() drains it, so a mid-loop exception never loses
         finished work) and mirror non-ok statuses to stats + event bus."""
-        res = Result(rid, tokens, status=status, reason=reason)
+        res = Result(rid, tokens, status=status, reason=reason,
+                     retries=self._retry_counts.get(rid, 0))
         self._completed.append(res)
         if status != "ok":
             self.stats[self._STATUS_COUNTER[status]] += 1
@@ -836,6 +1039,13 @@ class ServingEngine:
         self.slot_free[s] = True
         self.slot_req[s] = None
         self.slot_budget[s] = 0
+        self._slot_pos[s] = 0
+        if self._paged is not None:
+            # release refcounts and park the table on the slot's scratch
+            # block; the park is flushed to the device before the next
+            # decode dispatch (manager.dirty) or by the next admission's
+            # full-table push — nothing runs in between
+            self._paged.free(s)
 
     def _expire_deadlines(self, pending: Deque[Request]):
         """Finalize requests whose deadline (seconds since run()
@@ -871,7 +1081,28 @@ class ServingEngine:
         n, l_pad = plan.tokens.shape
         tokens = jnp.asarray(plan.tokens)
         lengths = jnp.asarray(plan.lengths)
-        if self.prefill_chunk and l_pad > self.prefill_chunk:
+        prefix = 0
+        if (self.share_prefix and n >= 2 and self.prefill_chunk
+                and plan.prefix_len >= self.share_min_prefix):
+            prefix = int(plan.prefix_len)
+        if prefix:
+            # prefill the shared prefix ONCE on one row, broadcast the
+            # cache to every admitted row, then walk only the per-row
+            # suffixes — prefill compute drops from sum(len_i) to
+            # prefix + sum(len_i - prefix)
+            out1, c1 = self._c.prefill(1)(
+                self.params, tokens[:1, :prefix],
+                jnp.full((1,), prefix, jnp.int32))
+            last, caches = self._c.broadcast_prefix(n)(c1, out1[:, 0])
+            for p in range(prefix, l_pad, self.prefill_chunk):
+                chunk = tokens[:, p:p + self.prefill_chunk]
+                last, caches = self._c.chunk(n)(
+                    self.params, caches, chunk, jnp.int32(p), lengths, last)
+            logits = last
+            self.stats["prefill_prefix_shared"] += 1
+            self.stats["prefill_tokens_computed"] += prefix + int(
+                sum(max(int(l) - prefix, 0) for l in plan.lengths))
+        elif self.prefill_chunk and l_pad > self.prefill_chunk:
             caches = self._c.fresh_caches(n)
             last = jnp.zeros((n, self.cfg.vocab_size), jnp.float32)
             for p in range(0, l_pad, self.prefill_chunk):
@@ -879,14 +1110,30 @@ class ServingEngine:
                 last, caches = self._c.chunk(n)(
                     self.params, caches, chunk, jnp.int32(p), lengths, last)
             logits = last
+            self.stats["prefill_tokens_computed"] += int(
+                sum(int(l) for l in plan.lengths))
         else:
             out, caches = self._c.prefill(n)(self.params, tokens, lengths)
             logits = out[:, 0]
+            self.stats["prefill_tokens_computed"] += int(
+                sum(int(l) for l in plan.lengths))
         temps = np.asarray([r.temperature for r in plan.requests], np.float32)
         self.key, sub = jax.random.split(self.key)
         first = np.asarray(self._c.sample(n)(sub, logits, jnp.asarray(temps)))
-        self.caches = self._c.insert(self.slots, n)(
-            self.caches, caches, jnp.asarray(slots, jnp.int32))
+        if self._paged is not None:
+            # shareability is judged against EVERY position prefill wrote —
+            # padded rows carry (masked) garbage up to l_pad, so the
+            # conservative write-span per row is [prefix, l_pad)
+            self._paged.admit(slots, [l_pad] * n, prefix_len=prefix)
+            ptables = {f"l{i}": jnp.asarray(t)
+                       for i, t in self._paged.tables.items()}
+            self.caches = self._c.insert_paged(self.slots, n)(
+                self.caches, caches, jnp.asarray(slots, jnp.int32), ptables)
+        else:
+            self.caches = self._c.insert(self.slots, n)(
+                self.caches, caches, jnp.asarray(slots, jnp.int32))
+        for s, l in zip(slots, plan.lengths):
+            self._slot_pos[s] = int(l)
         for i, (req, s) in enumerate(zip(plan.requests, slots)):
             self.slot_out[s] = [int(first[i])]
             self.slot_last[s] = int(first[i])
@@ -906,9 +1153,7 @@ class ServingEngine:
             budget = req.max_new_tokens - 1
             if budget <= 0:
                 self._finish(req.rid, self.slot_out[s], "ok")
-                self.slot_free[s] = True
-                self.slot_req[s] = None
-                self.slot_budget[s] = 0
+                self._free_slot(s)
             else:
                 self.slot_free[s] = False
                 self.slot_req[s] = req
@@ -995,8 +1240,62 @@ class ServingEngine:
         for s in self.faults.cache_poisons_due(
                 self.slots, tokens_done, self._cache_poison_applied):
             self._cache_poison_applied.add(s)
-            self.caches = _poison_slot_k(self.caches, s)
+            if self._paged is not None:
+                # the slot must own its blocks exclusively before NaN-ing:
+                # poisoning a refcount-shared prefix block would quarantine
+                # every sharer, not the targeted slot
+                self._paged_flush(self._paged.force_private(s))
+                self.caches = _poison_slot_k_paged(self.caches, s)
+            else:
+                self.caches = _poison_slot_k(self.caches, s)
             F.record_event("cache_poisoned", slot=s)
+
+    # --------------------------------------------------------------- paged --
+    def _paged_flush(self, moves: Dict[int, List[Tuple[int, int]]]):
+        """Dispatch COW block copies + the host table mirror to the device
+        (outside the decode transfer guard — tables are an explicit,
+        scheduled host->device push). No-op when nothing changed."""
+        pm = self._paged
+        m = max((len(v) for v in moves.values()), default=0)
+        if m == 0 and not pm.dirty:
+            return
+        tables = {f"l{i}": jnp.asarray(t) for i, t in pm.tables.items()}
+        if m:
+            # one bucketed move width per compile; layers with fewer moves
+            # pad with scratch->scratch self-copies (scratch ids are never
+            # real destinations, so padding can't collide with a move)
+            mpad = 1 << (m - 1).bit_length()
+            srcs, dsts = {}, {}
+            for i, mv in moves.items():
+                sc = pm.scratch_id(i, 0)
+                pad = mpad - len(mv)
+                srcs[f"l{i}"] = jnp.asarray(
+                    [a for a, _ in mv] + [sc] * pad, jnp.int32)
+                dsts[f"l{i}"] = jnp.asarray(
+                    [b for _, b in mv] + [sc] * pad, jnp.int32)
+            self.caches = self._c.fixup(self.slots, mpad)(
+                self.caches, tables, srcs, dsts)
+        else:
+            self.caches = self._c.fixup(self.slots, 0)(
+                self.caches, tables, {}, {})
+        pm.dirty = False
+
+    def _paged_sync(self, n: int):
+        """Pre-block paged maintenance: plan copy-on-write for every ring
+        row this block can write ([pos, pos+n*T) per live slot) and flush
+        moves + any parked tables."""
+        pm = self._paged
+        positions = {s: int(self._slot_pos[s]) for s in range(self.slots)
+                     if not self.slot_free[s]}
+        self._paged_flush(
+            pm.cow_moves(positions, n * self._c.tokens_per_step))
+
+    def paged_stats(self) -> Dict[str, int]:
+        """Block-pool occupancy (shared-prefix dedup shows up here)."""
+        if self._paged is None:
+            return {}
+        return {"blocks_in_use": self._paged.blocks_in_use(),
+                "blocks_total": self._paged.blocks_total()}
 
     def _kernel_fallback(self, err, n: int) -> List[Result]:
         """Rung one of the degradation ladder: the Pallas decode kernel
@@ -1019,7 +1318,8 @@ class ServingEngine:
         self._c = _get_compiled(self.cfg, self.max_len, "ref", self.top_k,
                                 self.mesh, self.profile,
                                 self.tokens_per_step, self.speculative,
-                                self.drafter, self._c.donate, self.faults)
+                                self.drafter, self._c.donate, self.faults,
+                                self.kv_layout)
         deleted = any(getattr(l, "is_deleted", lambda: False)()
                       for l in jax.tree.leaves(self.caches))
         if not deleted:
@@ -1027,11 +1327,26 @@ class ServingEngine:
         done = []
         for s in range(self.slots):
             if not self.slot_free[s]:
-                done.append(self._finish(
-                    self.slot_req[s].rid, self.slot_out[s], "failed",
-                    "kernel dispatch failed after cache donation"))
-                self._free_slot(s)
-        self.caches = self._c.fresh_caches(self.slots)
+                req = self.slot_req[s]
+                used = self._retry_counts.get(req.rid, 0)
+                if used < req.max_retries:
+                    # bounded retry: requeue through the normal admission
+                    # path — the retry re-prefills from the prompt (the
+                    # slot's partial output died with the donated caches)
+                    self._retry_counts[req.rid] = used + 1
+                    self.stats["readmitted"] += 1
+                    F.record_event("request_readmitted", rid=req.rid,
+                                   retry=used + 1)
+                    self._readmit.append(req)
+                    self._free_slot(s)
+                else:
+                    done.append(self._finish(
+                        req.rid, self.slot_out[s], "failed",
+                        "kernel dispatch failed after cache donation"))
+                    self._free_slot(s)
+        if self._paged is not None:
+            self._paged.reset()
+        self.caches = self._c.fresh_slot_caches(self.slots)
         self._dev = None
         return done
 
@@ -1049,6 +1364,8 @@ class ServingEngine:
         if not live:
             return []
         self._apply_cache_poisons(live)
+        if self._paged is not None:
+            self._paged_sync(n)
         use_spec, probe = self._spec_mode()
         if use_spec and self._hist_stale:
             self._reseed_history(live)
@@ -1148,6 +1465,17 @@ class ServingEngine:
         except F.KernelDispatchError as e:
             return self._kernel_fallback(e, n)
         self.stats["tokens_emitted"] += int(emit.sum())
+        if self._paged is not None:
+            # advance the per-slot ring-write position mirror: sequential
+            # steps write one row per executed step unconditionally (+n);
+            # spec steps net +e after rollback, and emit rows equal e
+            if use_spec:
+                adv = emit.sum(axis=(0, 2))
+                for s in live:
+                    self._slot_pos[s] += int(adv[s])
+            else:
+                for s in live:
+                    self._slot_pos[s] += n
         self.slot_last = np.array(tok, np.int32)      # writable host mirrors
         self.slot_budget = np.array(budget, np.int32)
         poisoned_np = np.asarray(poisoned)
@@ -1167,8 +1495,7 @@ class ServingEngine:
             elif self.slot_budget[s] <= 0:
                 done.append(self._finish(
                     self.slot_req[s].rid, self.slot_out[s], "ok"))
-                self.slot_free[s] = True
-                self.slot_req[s] = None
+                self._free_slot(s)
         return done
 
     def step(self) -> List[Result]:
@@ -1228,7 +1555,12 @@ class ServingEngine:
             else:
                 pending.append(r)
         try:
-            while pending or not all(self.slot_free):
+            while pending or self._readmit or not all(self.slot_free):
+                if self._readmit:
+                    # failed-slot retries rejoin the queue tail: FCFS among
+                    # themselves, no preemption of already-queued work
+                    readd, self._readmit = self._readmit, []
+                    pending.extend(readd)
                 self._expire_deadlines(pending)
                 self._admit(pending)
                 n = self._block_len()
@@ -1254,6 +1586,23 @@ def _poison_slot_k(caches, slot: int):
                         is_leaf=lambda c: isinstance(c, dict) and "k" in c)
 
 
+def _poison_slot_k_paged(caches, slot: int):
+    """Paged twin of `_poison_slot_k`: NaN the K pool blocks the slot's
+    table references. Caller must have forced the slot's blocks private
+    first (PagedManager.force_private) and flushed the moves."""
+    def visit(c):
+        if isinstance(c, dict) and "pk" in c:
+            c = dict(c)
+            if c["pk"].ndim == 6:       # local per-slot pool (S,B,nb+1,...)
+                c["pk"] = c["pk"].at[:, slot].set(jnp.nan)
+            else:                        # shared pool: poison the table row
+                ids = c["table"][0, slot]
+                c["pk"] = c["pk"].at[:, ids].set(jnp.nan)
+        return c
+    return jax.tree.map(visit, caches,
+                        is_leaf=lambda c: isinstance(c, dict) and "pk" in c)
+
+
 def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:
     """Decode-cache bytes — the paper's Fig. 3 memory comparison. Window
     attention: O(window); dense: O(context). Counts PHYSICAL rows
@@ -1261,7 +1610,7 @@ def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:
     from repro.core.layers import cache_allocation
     from repro.core.model import attn_cfg
     total = 0
-    for kind in cfg.layer_pattern:
+    for i, kind in enumerate(cfg.layer_pattern):
         if kind.startswith("mamba"):
             spec = cfg.ssm
             h = spec.num_heads(cfg.d_model)
@@ -1270,7 +1619,7 @@ def ring_cache_bytes(cfg: ModelConfig, batch: int, context: int) -> int:
                               * (spec.d_inner(cfg.d_model)
                                  + 2 * spec.num_groups * spec.state_dim) * 2)
             continue
-        acfg = attn_cfg(cfg, kind)
+        acfg = attn_cfg(cfg, kind, index=i)
         cap = cache_allocation(acfg, context)
         total += 2 * batch * acfg.num_kv_heads * cap * acfg.head_dim * 2
     return total * cfg.num_super_blocks

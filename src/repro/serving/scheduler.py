@@ -34,10 +34,14 @@ def normalize_prompt(prompt) -> np.ndarray:
 @dataclasses.dataclass
 class PrefillPlan:
     """One batched prefill: `tokens` (n, L_pad) right-padded int32 prompts
-    for `requests`, with per-row real `lengths` (n,)."""
+    for `requests`, with per-row real `lengths` (n,). `prefix_len` is the
+    longest token prefix shared by EVERY row (radix-trie LCP, 0 for
+    single-row plans) — a paged engine with prefix sharing enabled prefills
+    those tokens once and block-shares the untouched prefix pages."""
     requests: List
     tokens: np.ndarray
     lengths: np.ndarray
+    prefix_len: int = 0
 
 
 class Scheduler:
@@ -134,4 +138,6 @@ class Scheduler:
         for i, p in enumerate(flat):
             tokens[i, :p.size] = p
             lengths[i] = p.size
-        return PrefillPlan(requests=take, tokens=tokens, lengths=lengths)
+        from repro.serving.paged import batch_lcp
+        return PrefillPlan(requests=take, tokens=tokens, lengths=lengths,
+                           prefix_len=batch_lcp(flat))

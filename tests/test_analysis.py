@@ -205,13 +205,27 @@ def test_weak_type_and_lowering_cap():
 def test_pad_event_becomes_warn_finding():
     from repro.kernels import swat_decode
     swat_decode.consume_pad_events()
-    swat_decode._warn_pad(17, 16)
+    swat_decode._warn_pad(17, 16, 16)
     events = swat_decode.consume_pad_events()
     assert events and events[0]["w"] == 17
+    assert events[0]["chosen_block"] == 16
     assert swat_decode.consume_pad_events() == []      # drained
     rep = Rep.analyze_entry_points([], pad_events=events, label="kern")
     assert rep["summary"]["warnings"] == 1
     assert rep["findings"][0]["rule"] == "pad_fallback"
+    assert "16" in rep["findings"][0]["message"]       # names the block
+
+
+def test_paged_gather_event_becomes_warn_finding():
+    from repro.kernels import swat_decode
+    swat_decode.consume_pad_events()
+    swat_decode.record_paged_fallback(nb=4, page=16,
+                                      reason="table resolved outside kernel")
+    events = swat_decode.consume_pad_events()
+    assert events and events[0]["kind"] == "paged_gather"
+    rep = Rep.analyze_entry_points([], pad_events=events, label="kern")
+    assert rep["summary"]["warnings"] == 1
+    assert rep["findings"][0]["rule"] == "paged_gather_fallback"
 
 
 # -------------------------------------------------- engine integration --
