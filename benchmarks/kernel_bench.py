@@ -255,6 +255,12 @@ def smoke(rng):
     #    a cache-contract change that silently disables sharing (or makes
     #    COW lossy) refuses here
     check_serve_prefix_sharing()
+
+    # 8. telemetry gate over the same artifact: the metrics-on engine
+    #    must have emitted bitwise-identical tokens at under 3% overhead
+    #    with device counters matching host stats — instrumentation that
+    #    perturbs decode or taxes the hot path refuses here
+    check_serve_telemetry()
     print("[kernel_bench] smoke OK")
 
 
@@ -320,6 +326,35 @@ def check_serve_prefix_sharing(path=None):
     print(f"[kernel_bench] prefix-sharing gate: ratio {ratio} < 0.5 over "
           f"{ps['requests']} requests, pool {pool['sharing']} vs "
           f"{pool['baseline']} blocks, tokens identical")
+
+
+def check_serve_telemetry(path=None):
+    """Gate on BENCH_serve.json's `telemetry` section (written by
+    benchmarks/serve_bench.py): the metrics-on batched engine must be
+    bitwise identical to metrics-off, device counters must match the
+    host-side stats, and the recorded throughput overhead must stay under
+    3% (median-of-reps on both sides; the carry is a handful of donated
+    int32 vectors, so a real tax here means the counters left the scan)."""
+    import json
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(path) as f:
+        payload = json.load(f)
+    tel = payload.get("telemetry")
+    assert tel is not None, (
+        "BENCH_serve.json has no `telemetry` section — regenerate with "
+        "benchmarks/serve_bench.py")
+    assert tel["identical"], (
+        f"device metrics changed tokens: {tel} — the counter carry "
+        "perturbed the decode math; that is an engine regression")
+    assert tel["device_matches_host"], (
+        f"device counters disagree with host stats: {tel}")
+    assert tel["overhead_pct"] < 3.0, (
+        f"metrics overhead {tel['overhead_pct']}% breaches the 3% "
+        f"budget: {tel}")
+    print(f"[kernel_bench] telemetry gate: tokens identical, counters "
+          f"match, overhead {tel['overhead_pct']}% < 3%")
 
 
 def check_benchmark_artifact(path=None):

@@ -39,6 +39,13 @@ degradation events must be ZERO; the quarantine and pallas-fallback
 drills must fire) — `kernel_bench --smoke` refuses on a bad section.
 `--resilience-only` reruns just those probes and merges the section into
 the existing artifact.
+
+Each mode also carries a `latency` block (p50/p95/p99 TTFT / TPOT /
+queue-delay in ms, from the engine's request tracer), and a `telemetry`
+section records the device-counter A/B: the batched engine with the
+metrics pytree compiled into the scan carry must emit bitwise-identical
+tokens at under 3% throughput overhead (`kernel_bench --smoke` gates on
+both), with the device counters matching the host-side stats.
 """
 import argparse
 import os
@@ -53,10 +60,10 @@ import numpy as np
 
 def run_mode(cfg, params, reqs, *, scan_steps, batch_prefill, max_len,
              label, mesh=None, warm=True, speculative=0, draft=None,
-             reps=1, donate=True):
+             reps=1, donate=True, metrics=False):
     from repro.serving.engine import ServingEngine
 
-    kw = {"donate": donate}
+    kw = {"donate": donate, "metrics": metrics}
     if speculative:
         kw.update(speculative=speculative, draft=draft)
 
@@ -79,6 +86,16 @@ def run_mode(cfg, params, reqs, *, scan_steps, batch_prefill, max_len,
     print(f"[serve_bench] {label:<16} {n:4d} tokens in {dt:6.2f}s "
           f"-> {n / dt:8.1f} tok/s")
     return results, n / dt, eng
+
+
+def latency_of(eng):
+    """p50/p95/p99 TTFT / TPOT / queue delay of one mode's median run, in
+    milliseconds — the BENCH_serve.json `latency` rows (counts dropped:
+    they equal the request count)."""
+    summ = eng.tracer.latency_summary()
+    return {field: {p: round(summ[field][p] * 1e3, 3)
+                    for p in ("p50", "p95", "p99")}
+            for field in ("ttft", "tpot", "queue_delay")}
 
 
 def fit_selfsim(cfg, params, steps, Mod):
@@ -359,13 +376,15 @@ def main():
             sys.exit(1)
         return
 
-    base, base_tps, _ = run_mode(cfg, params, reqs, scan_steps=1,
-                                 batch_prefill=False, max_len=ARGS.max_len,
-                                 label="seed-style")
-    fast, fast_tps, _ = run_mode(cfg, params, reqs,
-                                 scan_steps=ARGS.scan_steps,
-                                 batch_prefill=True, max_len=ARGS.max_len,
-                                 label="batched")
+    base, base_tps, base_eng = run_mode(cfg, params, reqs, scan_steps=1,
+                                        batch_prefill=False,
+                                        max_len=ARGS.max_len,
+                                        label="seed-style")
+    fast, fast_tps, fast_eng = run_mode(cfg, params, reqs,
+                                        scan_steps=ARGS.scan_steps,
+                                        batch_prefill=True,
+                                        max_len=ARGS.max_len,
+                                        label="batched")
 
     same = all(a.tokens == b.tokens for a, b in zip(base, fast))
     print(f"[serve_bench] outputs identical: {same}; "
@@ -394,15 +413,39 @@ def main():
           f"copied ({don_tps / undon_tps:.2f}x; smoke-scale caches — the "
           f"copy removed is ~ring bytes per block, see ring_cache)")
 
+    # telemetry A/B: the same batched engine with the device counter pytree
+    # compiled into the scan carry (swatscope layer 1). Tokens must stay
+    # bitwise identical — counters are donated int32 carries read only at
+    # block boundaries — and the throughput tax must stay under the 3%
+    # gate kernel_bench --smoke enforces. The metrics-OFF side reuses the
+    # donated median above (same engine parameters, same reps).
+    met, met_tps, met_eng = run_mode(cfg, params, reqs,
+                                     scan_steps=ARGS.scan_steps,
+                                     batch_prefill=True,
+                                     max_len=ARGS.max_len,
+                                     label="batched/metrics", metrics=True,
+                                     reps=ARGS.spec_reps)
+    met_same = all(a.tokens == b.tokens for a, b in zip(don, met))
+    overhead_pct = 100.0 * (1.0 - met_tps / don_tps)
+    dev = met_eng.device_metrics()
+    counters_match = dev["tokens"] == met_eng.stats["tokens_emitted"]
+    print(f"[serve_bench] telemetry A/B: identical {met_same}; "
+          f"{met_tps:.1f} vs {don_tps:.1f} tok/s "
+          f"({overhead_pct:+.2f}% overhead, gate < 3); device "
+          f"tokens={dev['tokens']} (host {met_eng.stats['tokens_emitted']}, "
+          f"match={counters_match})")
+
     payload = {
         "bench": "serve", "arch": ARGS.arch,
         "requests": ARGS.requests, "slots": ARGS.slots,
         "prompt_len": ARGS.prompt_len, "new_tokens": ARGS.new_tokens,
         "scan_steps": ARGS.scan_steps, "window": ARGS.window,
-        "modes": {"seed_style": {"tok_s": round(base_tps, 2)},
+        "modes": {"seed_style": {"tok_s": round(base_tps, 2),
+                                 "latency": latency_of(base_eng)},
                   "batched": {"tok_s": round(fast_tps, 2),
                               "speedup_vs_seed":
-                                  round(fast_tps / base_tps, 3)}},
+                                  round(fast_tps / base_tps, 3),
+                              "latency": latency_of(fast_eng)}},
         "outputs_identical": bool(same),
         "donation_ab": {
             "donated": {"tok_s": round(don_tps, 2),
@@ -414,6 +457,15 @@ def main():
             "note": ("smoke-scale model on CPU: the removed per-block "
                      "copy is ~the ring-cache bytes, so the delta grows "
                      "with window*layers*slots; identity is the gate"),
+        },
+        "telemetry": {
+            "metrics_on": {"tok_s": round(met_tps, 2),
+                           "latency": latency_of(met_eng)},
+            "metrics_off": {"tok_s": round(don_tps, 2)},
+            "overhead_pct": round(overhead_pct, 3),
+            "identical": bool(met_same),
+            "device_counters": {k: int(v) for k, v in sorted(dev.items())},
+            "device_matches_host": bool(counters_match),
         },
     }
     shard_same = True
@@ -427,7 +479,7 @@ def main():
               file=sys.stderr)
     elif mesh_dims:
         mesh = parse_mesh(ARGS.mesh)
-        shard, shard_tps, _ = run_mode(
+        shard, shard_tps, shard_eng = run_mode(
             cfg, params, reqs, scan_steps=ARGS.scan_steps,
             batch_prefill=True, max_len=ARGS.max_len,
             label=f"sharded/{ARGS.mesh}", mesh=mesh)
@@ -447,7 +499,8 @@ def main():
         payload["modes"]["sharded"] = {
             "mesh": ARGS.mesh, "tok_s": round(shard_tps, 2),
             "identical_to_batched": bool(identical),
-            "slot_parallel": bool(slot_parallel)}
+            "slot_parallel": bool(slot_parallel),
+            "latency": latency_of(shard_eng)}
 
     # ------------------------------------------------- speculative decode --
     spec_ok = True
@@ -472,7 +525,7 @@ def main():
         fit_reqs = [Request(rid=i, prompt=p,
                             max_new_tokens=ARGS.new_tokens)
                     for i, p in enumerate(fit_prompts)]
-        seqr, seq_tps, _ = run_mode(
+        seqr, seq_tps, seq_eng = run_mode(
             cfg, fit_params, fit_reqs, scan_steps=ARGS.scan_steps,
             batch_prefill=True, max_len=ARGS.max_len,
             label="sequential/fit", reps=ARGS.spec_reps)
@@ -489,9 +542,11 @@ def main():
               f"({spec_eng.stats['spec_steps']} verify steps for "
               f"{spec_eng.stats['tokens_emitted']} tokens)")
         payload["modes"]["sequential_selfsim"] = {
-            "tok_s": round(seq_tps, 2), "fit_steps": ARGS.fit_steps}
+            "tok_s": round(seq_tps, 2), "fit_steps": ARGS.fit_steps,
+            "latency": latency_of(seq_eng)}
         payload["modes"]["speculative"] = {
             "tok_s": round(spec_tps, 2),
+            "latency": latency_of(spec_eng),
             "speedup_vs_sequential": round(spec_speedup, 3),
             "acceptance_rate": round(spec_eng.acceptance_rate, 4),
             "k": ARGS.speculative,
@@ -526,6 +581,10 @@ def main():
         sys.exit(1)
     if not don_same:
         print("[serve_bench] FAIL: donation changed tokens", file=sys.stderr)
+        sys.exit(1)
+    if not met_same or not counters_match:
+        print("[serve_bench] FAIL: device metrics changed tokens or "
+              "disagree with host stats", file=sys.stderr)
         sys.exit(1)
     if not shard_same:
         print("[serve_bench] FAIL: sharded mode disagrees", file=sys.stderr)

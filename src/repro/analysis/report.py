@@ -48,6 +48,7 @@ def analyze_entry_points(points: Sequence[T.EntryPoint], *,
         findings += R.check_donation(tr, min_bytes=min_carry_bytes)
         findings += R.check_host_sync(tr)
         findings += R.check_dtype_promotion(tr)
+        findings += R.check_telemetry(tr)
 
         stats = (parse_collectives(tr.compiled_hlo)
                  if tr.compiled_hlo is not None else None)

@@ -1,6 +1,6 @@
 """swatlint rule families over traced entry points.
 
-Five families, each a pure function `TracedEntry -> [Finding]` (plus one
+Six families, each a pure function `TracedEntry -> [Finding]` (plus one
 matrix-level audit over the whole traced set):
 
   donation          every declared carry leaf donated in StableHLO AND
@@ -13,6 +13,11 @@ matrix-level audit over the whole traced set):
   dtype_promotion   bf16 values upcast to f32 then fed to matmuls
   recompile         distinct compile keys per entry family across the
                     serving matrix + weak-type leaks into compile keys
+  telemetry         metrics-carrying scans ("metrics" tag): the counter
+                    carry must be donated+aliased like the caches, and the
+                    instrumented program stays held to the same zero-
+                    callback / zero-collective budgets — proof that
+                    observability adds no host syncs to the hot path
 
 Severity contract: "error" findings fail `analyze --check` outright;
 "warn" findings fail only when their count grows past the committed
@@ -236,6 +241,58 @@ def check_dtype_promotion(tr: TracedEntry) -> List[Finding]:
 
 def _is_literal(v) -> bool:
     return type(v).__name__ == "Literal"
+
+
+# --------------------------------------------------------------- telemetry --
+
+def check_telemetry(tr: TracedEntry) -> List[Finding]:
+    """Prove the metrics carry is free: entries tagged "metrics" (scans
+    compiled with device counters) must carry the counter pytree as their
+    LAST argument, all-int32, donated AND aliased in the executable — an
+    in-place accumulator, not a per-block copy. The same entries still run
+    under the host_sync / collectives budgets (those families fire on the
+    instrumented jaxpr/HLO directly), so together the three families prove
+    telemetry adds zero host syncs, zero collectives, and zero copies."""
+    if "metrics" not in tr.point.tags:
+        return []
+    out: List[Finding] = []
+    name = tr.point.name
+    mx_argnum = len(tr.point.args) - 1   # by construction: mx rides last
+    leaves = tr.arg_leaves(mx_argnum)
+    if not leaves:
+        return [Finding(
+            "telemetry", ERROR, name,
+            "entry tagged `metrics` but its last argument has no leaves — "
+            "the counter carry is missing from the traced signature",
+            {"argnum": mx_argnum})]
+    wrong = [l for l in leaves if l.dtype != "int32"]
+    if wrong:
+        out.append(Finding(
+            "telemetry", ERROR, name,
+            f"{len(wrong)} counter leaves are not int32 — a dtype "
+            "promotion snuck into the metrics carry",
+            {"leaves": [(l.index, l.dtype) for l in wrong]}))
+    undonated = [l for l in leaves if l.index not in tr.donated]
+    if undonated:
+        out.append(Finding(
+            "telemetry", ERROR, name,
+            f"metrics carry (arg {mx_argnum}) is not donated: "
+            f"{len(undonated)}/{len(leaves)} counter leaves copied every "
+            "block instead of accumulating in place",
+            {"argnum": mx_argnum,
+             "undonated_leaves": [l.index for l in undonated]}))
+    elif tr.compiled_hlo is not None:
+        aliased = {i for i, _ in tr.alias_pairs}
+        dead = [l for l in leaves if l.index not in aliased
+                and l.index not in tr.pruned]
+        if dead:
+            out.append(Finding(
+                "telemetry", ERROR, name,
+                f"metrics carry donated but {len(dead)} counter leaves "
+                "have no input-output alias in the executable — XLA "
+                "dropped the donation (silent copy per block)",
+                {"unaliased_leaves": [l.index for l in dead]}))
+    return out
 
 
 # --------------------------------------------------------- recompile audit --

@@ -405,25 +405,35 @@ def engine_entry_points(engine, *, batch_sizes: Optional[Sequence[int]] = None,
     # (and, for chaos engines, injected) programs is how the baseline pins
     # "guards add zero collectives / host syncs" to the hot path
     fin = ((sds((slots,)),) if c.faults.has_logit_faults else ())
+    # metrics engines carry the telemetry counter pytree as the LAST scan
+    # argument; it is a carry like the caches (donated, fed back verbatim)
+    # and tagging "metrics" routes the telemetry rule family at it
+    from repro.telemetry import metrics as _MX
+    metrics_on = bool(getattr(c, "metrics", False))
+    mx = (({**{k: sds((slots,)) for k in _MX.PER_SLOT},
+            **{k: sds(()) for k in _MX.SCALARS}},) if metrics_on else ())
+    hot = hot | {"metrics"} if metrics_on else hot
     for n in scan_lens:
         if engine.speculative:
             drafter = c.drafter
+            args = (params_sds, slot_caches_sds(), sds((slots,)),
+                    sds((slots,), jnp.bool_), sds((slots,)),
+                    sds((slots,), jnp.float32), sds((), jnp.bool_),
+                    key_sds, sds((slots, drafter.history)),
+                    sds((slots,)), sds((slots,), jnp.bool_)) + fin + mx
             points.append(EntryPoint(
                 name=f"spec_scan[n={n},slots={slots}]", family="spec_scan",
-                fn=c.spec_scan(n, slots),
-                args=(params_sds, slot_caches_sds(), sds((slots,)),
-                      sds((slots,), jnp.bool_), sds((slots,)),
-                      sds((slots,), jnp.float32), sds((), jnp.bool_),
-                      key_sds, sds((slots, drafter.history)),
-                      sds((slots,)), sds((slots,), jnp.bool_)) + fin,
-                carries=(1,), tags=hot))
+                fn=c.spec_scan(n, slots), args=args,
+                carries=(1,) + ((len(args) - 1,) if metrics_on else ()),
+                tags=hot))
         else:
+            args = (params_sds, slot_caches_sds(), sds((slots,)),
+                    sds((slots,), jnp.bool_), sds((slots,)),
+                    sds((slots,), jnp.float32), sds((), jnp.bool_),
+                    key_sds, sds((slots,), jnp.bool_)) + fin + mx
             points.append(EntryPoint(
                 name=f"scan[n={n},slots={slots}]", family="scan",
-                fn=c.scan(n, slots),
-                args=(params_sds, slot_caches_sds(), sds((slots,)),
-                      sds((slots,), jnp.bool_), sds((slots,)),
-                      sds((slots,), jnp.float32), sds((), jnp.bool_),
-                      key_sds, sds((slots,), jnp.bool_)) + fin,
-                carries=(1,), tags=hot))
+                fn=c.scan(n, slots), args=args,
+                carries=(1,) + ((len(args) - 1,) if metrics_on else ()),
+                tags=hot))
     return points

@@ -46,6 +46,21 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _census_dispatch(q, k_cache, *, impl: str, fused: bool, cap: int,
+                     g: int, window: int) -> None:
+    """Trace-time dispatch census (telemetry.kernelprof, opt-in). jit
+    traces each shape once, so recording here yields a complete
+    shape -> dispatch map of what the engine compiled at ZERO runtime
+    cost — the compiled program is byte-identical, census on or off."""
+    from repro.telemetry import kernelprof as KP
+    if not KP.census_enabled():
+        return
+    b, hq, t, d = q.shape
+    KP.record_dispatch(op="decode_attention", impl=impl, fused=fused,
+                       b=b, h_q=hq, h_kv=k_cache.shape[1], t=t, d=d,
+                       cap=cap, num_global=g, window=window)
+
+
 # --------------------------------------------------------------------------
 # Pallas primitive with custom VJP (one block pattern)
 # --------------------------------------------------------------------------
@@ -354,6 +369,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, spec: AttentionSpec, *,
     pos = cl if pos is None else _per_slot(pos, b)
     nn = (jnp.full((b,), t, jnp.int32) if num_new is None
           else _per_slot(num_new, b))
+    _census_dispatch(q, k_cache, impl=impl, fused=fuse, cap=cap, g=g,
+                     window=window)
     if impl == "pallas":
         from repro.kernels.swat_decode import swat_decode
         interpret = default_interpret() if interpret is None else interpret

@@ -285,6 +285,14 @@ def swat_decode(q, k_cache, v_cache, pos, *,
     scale = float(d ** -0.5 if scale is None else scale)
     requested_block = block_kv
     block_kv, needs_pad = decode_block_kv(w, block_kv)
+    from repro.telemetry import kernelprof as KP
+    if KP.census_enabled():
+        # trace-time only (see ops._census_dispatch): records the block
+        # geometry the kernel actually RUNS with, pad fallback included
+        KP.record_dispatch(op="swat_decode", b=b, h_q=hq, h_kv=hkv, t=t,
+                           d=d, w=w, cap=cap, num_global=g,
+                           window=int(window), fused=fuse,
+                           block_kv=block_kv, needs_pad=needs_pad)
     if needs_pad:
         _warn_pad(w, requested_block, block_kv)
         w_pad = -(-w // block_kv) * block_kv

@@ -87,6 +87,15 @@ def main():
             return ServingEngine(dense, params, batch_slots=4, max_len=128,
                                  scan_steps=4, mesh=parse_mesh("4x1"),
                                  kv_layout="paged")
+        if label == "metrics_on":
+            # the instrumented program on the strictest topology: the
+            # device metrics pytree rides the scan carry, so the
+            # telemetry rule family must prove it int32 / donated /
+            # aliased and the host-sync + collective families must stay
+            # clean with counters compiled in
+            return ServingEngine(dense, params, batch_slots=4, max_len=128,
+                                 scan_steps=4, mesh=parse_mesh("4x1"),
+                                 metrics=True)
         if label == "chaos_4x1":
             # the fault-injected program on the strictest topology: logit
             # poison compiled into a slot-parallel decode scan must STILL
@@ -101,7 +110,7 @@ def main():
 
     matrix = ["single", "swat_pallas", "spec_k2", "slot_parallel_4x1",
               "tp_2x2", "chaos_4x1", "paged_single",
-              "paged_slot_parallel_4x1"]
+              "paged_slot_parallel_4x1", "metrics_on"]
     if args.engines:
         matrix = [x.strip() for x in args.engines.split(",") if x.strip()]
 

@@ -1,0 +1,160 @@
+"""swatscope CLI: inspect, validate, and profile serving telemetry.
+
+Three subcommands, all off the hot path:
+
+    # validate exported artifacts (the CI metrics lane)
+    PYTHONPATH=src python -m repro.launch.scope validate \
+        --trace /tmp/trace.json --metrics /tmp/metrics.prom
+
+    # per-shape kernel latency + analytic roofline rows
+    PYTHONPATH=src python -m repro.launch.scope profile \
+        --impl ref --window 16 --cap 64 --batch 2 --heads-kv 2
+
+    # trace-time dispatch census of a smoke serve (which kernel shapes
+    # did the engine actually compile?)
+    PYTHONPATH=src python -m repro.launch.scope census --arch llama3.2-1b
+
+`validate` exits nonzero listing every schema problem; `profile` prints
+one row per shape (p50/p95 latency, FLOPs, HBM bytes, intensity);
+`census` runs a tiny instrumented serve and prints the deduped
+(shape -> traces) map plus the engine snapshot.
+"""
+import argparse
+import json
+import sys
+
+
+def _cmd_validate(args):
+    from repro.telemetry import validate as V
+
+    problems = []
+    if args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        for p in V.validate_chrome_trace(doc):
+            problems.append(f"{args.trace}: {p}")
+        if not problems:
+            n = len(doc.get("traceEvents", []))
+            print(f"[scope] {args.trace}: valid chrome trace ({n} events)")
+    if args.metrics:
+        with open(args.metrics) as f:
+            text = f.read()
+        ms = V.validate_prometheus(text)
+        for p in ms:
+            problems.append(f"{args.metrics}: {p}")
+        if not ms:
+            n = sum(1 for ln in text.splitlines()
+                    if ln.strip() and not ln.startswith("#"))
+            print(f"[scope] {args.metrics}: valid prometheus exposition "
+                  f"({n} samples)")
+    if not args.trace and not args.metrics:
+        print("[scope] nothing to validate (pass --trace and/or --metrics)")
+        return 2
+    for p in problems:
+        print(f"[scope] INVALID: {p}")
+    return 1 if problems else 0
+
+
+def _cmd_profile(args):
+    from repro.telemetry import kernelprof as KP
+
+    shape = {"b": args.batch, "h_kv": args.heads_kv, "group": args.group,
+             "t": args.tokens, "d": args.head_dim, "window": args.window,
+             "num_global": args.num_global, "cap": args.cap}
+    rows = KP.profile_decode([shape], impl=args.impl, iters=args.iters)
+    for r in rows:
+        print(f"[scope] {args.impl} b={r['b']} h_kv={r['h_kv']} "
+              f"g={r.get('group', 1)} t={r['t']} d={r['d']} "
+              f"window={r['window']} cap={r['cap']}: "
+              f"p50={r['p50_us']:.1f}us p95={r['p95_us']:.1f}us "
+              f"({r['flops'] / 1e6:.2f} MFLOP, "
+              f"{r['hbm_bytes'] / 1e6:.2f} MB, "
+              f"intensity={r['intensity']:.2f} flop/B, "
+              f"band={r['band_rows']} rows)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"[scope] wrote {args.out}")
+    return 0
+
+
+def _cmd_census(args):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config, with_swat
+    from repro.core import model as Mod
+    from repro.serving.engine import Request, ServingEngine
+    from repro.telemetry import kernelprof as KP
+
+    cfg = with_swat(get_smoke_config(args.arch), window=args.window,
+                    num_global=4)
+    params = Mod.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size, (16,)
+                                       ).astype(np.int32),
+                    max_new_tokens=8)
+            for i in range(args.requests)]
+    KP.enable_census(True)
+    try:
+        eng = ServingEngine(cfg, params, batch_slots=2, max_len=64,
+                            scan_steps=4, decode_impl=args.impl,
+                            metrics=True)
+        eng.run(reqs)
+    finally:
+        KP.enable_census(False)
+    census = KP.consume_census()
+    print(f"[scope] dispatch census: {len(census)} distinct kernel shapes")
+    for rec in census:
+        traces = rec.pop("traces")
+        print("[scope]   " + " ".join(f"{k}={v}"
+                                      for k, v in sorted(rec.items()))
+              + f"  (traced {traces}x)")
+    snap = eng.snapshot()
+    print("[scope] engine snapshot: "
+          + json.dumps(snap, sort_keys=True, default=str))
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(prog="scope")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("validate", help="schema-check exported artifacts")
+    v.add_argument("--trace", default=None,
+                   help="chrome-trace JSON (from serve --trace-out)")
+    v.add_argument("--metrics", default=None,
+                   help="prometheus text (from serve --metrics-out)")
+    v.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser("profile", help="kernel latency + roofline rows")
+    p.add_argument("--impl", choices=("ref", "pallas"), default="ref")
+    p.add_argument("--batch", type=int, default=2)
+    p.add_argument("--heads-kv", type=int, default=2)
+    p.add_argument("--group", type=int, default=2,
+                   help="query heads per kv head (GQA group)")
+    p.add_argument("--tokens", type=int, default=1)
+    p.add_argument("--head-dim", type=int, default=64)
+    p.add_argument("--window", type=int, default=16)
+    p.add_argument("--num-global", type=int, default=4)
+    p.add_argument("--cap", type=int, default=64,
+                   help="physical ring rows (>= window+globals+tokens)")
+    p.add_argument("--iters", type=int, default=20)
+    p.add_argument("--out", default=None, help="write rows as JSON")
+    p.set_defaults(fn=_cmd_profile)
+
+    c = sub.add_parser("census", help="trace-time dispatch census of a "
+                                      "smoke serve")
+    c.add_argument("--arch", default="llama3.2-1b")
+    c.add_argument("--impl", choices=("ref", "pallas"), default="ref")
+    c.add_argument("--window", type=int, default=16)
+    c.add_argument("--requests", type=int, default=4)
+    c.set_defaults(fn=_cmd_census)
+
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

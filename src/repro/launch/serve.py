@@ -98,6 +98,18 @@ def main():
                     default="contiguous",
                     help="cache residency: per-slot rings or the paged "
                          "block pool + tables (see serving README)")
+    # ------------------------------------------------- observability ----
+    ap.add_argument("--metrics", action="store_true",
+                    help="compile device-resident counters into the decode "
+                         "scan (tokens identical; read at block boundaries) "
+                         "and print a Prometheus summary after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of request lifecycle "
+                         "spans to PATH (open in chrome://tracing / "
+                         "Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition to PATH "
+                         "(implies --metrics)")
     ap.add_argument("--share-prefix", action="store_true",
                     help="prefill each admission batch's common prompt "
                          "prefix once and block-share it (paged, "
@@ -140,7 +152,8 @@ def main():
         max_prompt_len=args.max_prompt_len or None,
         max_pending=args.max_pending or None,
         spec_min_acceptance=args.spec_min_acceptance,
-        kv_layout=args.kv_layout, share_prefix=args.share_prefix)
+        kv_layout=args.kv_layout, share_prefix=args.share_prefix,
+        metrics=args.metrics or bool(args.metrics_out))
     rng = np.random.RandomState(0)
     if args.share_prefix:
         # shared-prefix demo workload: one system prompt, short suffixes
@@ -202,6 +215,28 @@ def main():
         if r.status != "ok":
             print(f"[serve]   rid {r.rid}: {r.status}"
                   + (f" — {r.reason}" if r.reason else ""))
+
+    lat = engine.tracer.latency_summary()
+    if lat["ttft"]["count"]:
+        ttft, tpot = lat["ttft"], lat["tpot"]
+        print(f"[serve] latency: ttft p50={ttft['p50'] * 1e3:.1f}ms "
+              f"p95={ttft['p95'] * 1e3:.1f}ms; "
+              f"tpot p50={tpot['p50'] * 1e3:.2f}ms "
+              f"p95={tpot['p95'] * 1e3:.2f}ms "
+              f"({ttft['count']} finished)")
+    if engine.metrics:
+        dev = engine.device_metrics()
+        print("[serve] device counters: "
+              + " ".join(f"{k}={v}" for k, v in sorted(dev.items())))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics_text())
+        print(f"[serve] wrote metrics: {args.metrics_out}")
+    if args.trace_out:
+        import json
+        with open(args.trace_out, "w") as f:
+            json.dump(engine.chrome_trace(), f)
+        print(f"[serve] wrote trace: {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -63,6 +63,9 @@ from repro.serving import sampling
 from repro.serving.drafter import NGramDrafter, get_drafter
 from repro.serving.faults import FaultPlan
 from repro.serving.scheduler import PrefillPlan, Scheduler, normalize_prompt
+from repro.telemetry import events as TEV
+from repro.telemetry import metrics as MX
+from repro.telemetry.tracer import Tracer, prometheus_text
 
 # the Result status taxonomy (see serving/README.md "Resilience"):
 #   ok        full budget served (or prompt-only request)
@@ -145,7 +148,7 @@ class _Compiled:
                  tokens_per_step: int = 1, speculative: int = 0,
                  draft: Optional[NGramDrafter] = None, donate: bool = True,
                  faults: FaultPlan = FaultPlan(),
-                 kv_layout: str = "contiguous"):
+                 kv_layout: str = "contiguous", metrics: bool = False):
         self.cfg, self.max_len = cfg, max_len
         self.decode_impl, self.top_k = decode_impl, top_k
         # "paged": slot caches hold block pools + tables instead of
@@ -163,6 +166,12 @@ class _Compiled:
         # compiles an extra countdown argument + one masked select into the
         # scan body; the default plan compiles the production program
         self.faults = faults
+        # metrics=True compiles the device-counter carry (telemetry.metrics)
+        # into the scan bodies — part of the compile identity like faults,
+        # so metrics=False engines run today's exact programs. ring_mod is
+        # the wrap modulus for the ring_wraps counter: static per engine.
+        self.metrics = metrics
+        self.ring_mod = MX.ring_modulus(cfg, max_len, tokens_per_step - 1)
         self.mesh, self.profile = mesh, profile
         if mesh is not None:
             from repro.distributed import sharding as Sh
@@ -517,6 +526,7 @@ class _Compiled:
         lookahead = self.lookahead
         act = self._act_sharding(slots)
         inject = self.faults.has_logit_faults
+        metrics, ring_mod = self.metrics, self.ring_mod
         # poison value per slot: a NUMPY constant baked into the trace
         # (eager jnp here would dispatch under the engine's transfer guard)
         bad_val = (np.where(self.faults.inf_mask(slots),
@@ -524,9 +534,9 @@ class _Compiled:
                    if inject else None)
 
         def run_scan(params, caches, tok, active, budget, temps, anyt, key,
-                     poisoned, fin):
+                     poisoned, fin, mx):
             def body(carry, _):
-                caches, tok, active, budget, key, poisoned, fin = carry
+                caches, tok, active, budget, key, poisoned, fin, mx = carry
                 logits, caches = Mod.decode_step(
                     params, cfg, {"tokens": tok[:, None]}, caches, impl=impl,
                     act_sharding=act, lookahead=lookahead)
@@ -555,32 +565,52 @@ class _Compiled:
                 active = ok & (budget > 0)
                 if inject:
                     fin = fin - ok.astype(jnp.int32)
-                return ((caches, nxt, active, budget, key, poisoned, fin),
-                        (nxt, emitted))
+                if metrics:
+                    # device counters: pure per-slot int32 adds over values
+                    # the body already holds — sampling/RNG/guard math are
+                    # untouched, so tokens stay bitwise metrics-off
+                    mx = MX.seq_update(mx, ok, bad, ring_mod)
+                return ((caches, nxt, active, budget, key, poisoned, fin,
+                         mx), (nxt, emitted))
 
             carry, (toks, emit) = jax.lax.scan(
-                body, (caches, tok, active, budget, key, poisoned, fin),
+                body, (caches, tok, active, budget, key, poisoned, fin, mx),
                 None, length=n)
-            caches, tok, active, budget, key, poisoned, fin = carry
+            caches, tok, active, budget, key, poisoned, fin, mx = carry
             return (caches, tok, active, budget, key, toks, emit, poisoned
-                    ) + ((fin,) if inject else ())
+                    ) + ((fin,) if inject else ()) + ((mx,) if metrics
+                                                      else ())
 
-        if inject:
+        # fin / mx ride the carry as empty pytrees (None) when their
+        # feature is off, so the plain program has no extra state at all
+        if inject and metrics:
             fn = run_scan
+        elif inject:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   poisoned, fin):
+                return run_scan(params, caches, tok, active, budget, temps,
+                                anyt, key, poisoned, fin, None)
+        elif metrics:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   poisoned, mx):
+                return run_scan(params, caches, tok, active, budget, temps,
+                                anyt, key, poisoned, None, mx)
         else:
             def fn(params, caches, tok, active, budget, temps, anyt, key,
                    poisoned):
-                # fin rides the carry as an empty pytree (None) so the
-                # clean program has no countdown state at all
                 return run_scan(params, caches, tok, active, budget, temps,
-                                anyt, key, poisoned, None)
+                                anyt, key, poisoned, None, None)
 
         # donate the ring caches: the decode block's only multi-MB carry.
         # Un-donated, XLA materializes a full copy of every K/V ring per
         # block (the analyzer's first real catch); donated, the compiled
         # executable aliases them input->output and the scan mutates the
         # same buffers the engine re-feeds next block.
-        don = self._donate(1)
+        # the metrics carry is donated like the caches: tiny, but donation
+        # keeps the counters a true in-place accumulator (no copy per block
+        # and the telemetry lint can prove the alias)
+        mx_arg = 9 + (1 if inject else 0)
+        don = self._donate(1, mx_arg) if metrics else self._donate(1)
         if self.mesh is None:
             return jax.jit(fn, donate_argnums=don)
         cache_sh = self.slot_cache_sharding(slots)
@@ -589,12 +619,14 @@ class _Compiled:
         vecf = self.batch_sharding(self._sds((slots,), jnp.float32), slots)
         blk = self.batch_sharding(self._sds((n, slots)), slots, slot_dim=1)
         fin_in = (veci,) if inject else ()
+        mx_in = ((MX.metrics_shardings(veci, self._rep),) if metrics
+                 else ())
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
-                          vecf, self._rep, self._rep, vecb) + fin_in,
+                          vecf, self._rep, self._rep, vecb) + fin_in + mx_in,
             out_shardings=(cache_sh, veci, vecb, veci, self._rep, blk, blk,
-                           vecb) + fin_in,
+                           vecb) + fin_in + mx_in,
             donate_argnums=don)
 
     # ------------------------------------------------------- speculative --
@@ -645,6 +677,7 @@ class _Compiled:
         drafter = self.drafter
         act = self._act_sharding(slots, t)
         inject = self.faults.has_logit_faults
+        metrics, ring_mod = self.metrics, self.ring_mod
         bad_val = (np.where(self.faults.inf_mask(slots),
                             np.inf, np.nan).astype(np.float32)
                    if inject else None)
@@ -652,7 +685,7 @@ class _Compiled:
                    if self.faults.corrupt_draft_slots else None)
 
         def run_spec(params, caches, tok, active, budget, temps, anyt, key,
-                     hist, hcnt, poisoned, fin):
+                     hist, hcnt, poisoned, fin, mx):
             toks0 = jnp.zeros((n, slots, t), jnp.int32)
             emit0 = jnp.zeros((n, slots, t), jnp.bool_)
             active0 = active
@@ -671,7 +704,7 @@ class _Compiled:
 
             def body(carry):
                 (i, caches, tok, active, budget, key, hist, hcnt, poisoned,
-                 fin, toks_buf, emit_buf) = carry
+                 fin, toks_buf, emit_buf, mx) = carry
                 drafts = drafter.propose(hist, hcnt, k)
                 if corrupt is not None:
                     # chaos: replace the slot's proposals with out-of-vocab
@@ -747,26 +780,45 @@ class _Compiled:
                 active = ok & (budget > 0)
                 if inject:
                     fin = fin - e
+                if metrics:
+                    # mirrors the host-side spec accounting exactly: a slot
+                    # that ran (e >= 1) proposed k drafts, kept e - 1
+                    mx = MX.spec_update(mx, e, bad, k, ring_mod)
                 return (i + 1, caches, tok, active, budget, key, hist, hcnt,
                         poisoned, fin,
-                        toks_buf.at[i].set(ver), emit_buf.at[i].set(emitted))
+                        toks_buf.at[i].set(ver), emit_buf.at[i].set(emitted),
+                        mx)
 
             (steps, caches, tok, active, budget, key, hist, hcnt, poisoned,
-             fin, toks, emit) = jax.lax.while_loop(
+             fin, toks, emit, mx) = jax.lax.while_loop(
                 cond, body, (jnp.int32(0), caches, tok, active, budget, key,
-                             hist, hcnt, poisoned, fin, toks0, emit0))
+                             hist, hcnt, poisoned, fin, toks0, emit0, mx))
             return (caches, tok, active, budget, key, hist, hcnt, toks,
-                    emit, steps, poisoned) + ((fin,) if inject else ())
+                    emit, steps, poisoned) + ((fin,) if inject else ()
+                                              ) + ((mx,) if metrics else ())
 
-        if inject:
+        # fin / mx: empty (None) carries when their feature is off
+        if inject and metrics:
             fn = run_spec
+        elif inject:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   hist, hcnt, poisoned, fin):
+                return run_spec(params, caches, tok, active, budget, temps,
+                                anyt, key, hist, hcnt, poisoned, fin, None)
+        elif metrics:
+            def fn(params, caches, tok, active, budget, temps, anyt, key,
+                   hist, hcnt, poisoned, mx):
+                return run_spec(params, caches, tok, active, budget, temps,
+                                anyt, key, hist, hcnt, poisoned, None, mx)
         else:
             def fn(params, caches, tok, active, budget, temps, anyt, key,
                    hist, hcnt, poisoned):
                 return run_spec(params, caches, tok, active, budget, temps,
-                                anyt, key, hist, hcnt, poisoned, None)
+                                anyt, key, hist, hcnt, poisoned, None, None)
 
-        don = self._donate(1)            # ring caches: see _make_scan
+        # caches + metrics carries donated: see _make_scan
+        mx_arg = 11 + (1 if inject else 0)
+        don = self._donate(1, mx_arg) if metrics else self._donate(1)
         if self.mesh is None:
             return jax.jit(fn, donate_argnums=don)
         cache_sh = self.slot_cache_sharding(slots)
@@ -778,13 +830,15 @@ class _Compiled:
         blk = self.batch_sharding(
             self._sds((n, slots, t)), slots, slot_dim=1)
         fin_in = (veci,) if inject else ()
+        mx_in = ((MX.metrics_shardings(veci, self._rep),) if metrics
+                 else ())
         return jax.jit(
             fn,
             in_shardings=(self.param_sharding, cache_sh, veci, vecb, veci,
                           vecf, self._rep, self._rep, hist_sh, veci,
-                          vecb) + fin_in,
+                          vecb) + fin_in + mx_in,
             out_shardings=(cache_sh, veci, vecb, veci, self._rep, hist_sh,
-                           veci, blk, blk, self._rep, vecb) + fin_in,
+                           veci, blk, blk, self._rep, vecb) + fin_in + mx_in,
             donate_argnums=don)
 
 
@@ -795,10 +849,11 @@ def _get_compiled(cfg: ModelConfig, max_len: int, decode_impl: str,
                   draft: Optional[NGramDrafter] = None,
                   donate: bool = True,
                   faults: FaultPlan = FaultPlan(),
-                  kv_layout: str = "contiguous") -> _Compiled:
+                  kv_layout: str = "contiguous",
+                  metrics: bool = False) -> _Compiled:
     return _Compiled(cfg, max_len, decode_impl, top_k, mesh, profile,
                      tokens_per_step, speculative, draft, donate, faults,
-                     kv_layout)
+                     kv_layout, metrics)
 
 
 class ServingEngine:
@@ -819,7 +874,9 @@ class ServingEngine:
                  spec_resume_acceptance: Optional[float] = None,
                  kv_layout: str = "contiguous",
                  share_prefix: bool = False,
-                 share_min_prefix: int = 16):
+                 share_min_prefix: int = 16,
+                 metrics: bool = False,
+                 trace_capacity: int = 4096):
         """scan_steps=1 degenerates to the seed engine's per-token host
         sync; prefill_chunk=0 disables sequence-axis chunking (single-shot
         batched prefill); batch_prefill=False admits one prompt per prefill
@@ -899,7 +956,19 @@ class ServingEngine:
         (PrefillPlan.prefix_len, the scheduler's radix-trie LCP) and
         prefill chunking is on, the prefix prefills ONCE, broadcasts to
         every row, and untouched prefix blocks are refcount-shared until
-        a ring write diverges them (copy-on-write)."""
+        a ring write diverges them (copy-on-write).
+
+        metrics: compile device-resident telemetry counters (swatscope
+        layer 1) into the decode/verify scan bodies — one extra donated
+        int32-pytree carry, read out ONLY at `device_metrics()` /
+        `metrics_text()`, never inside a block. Part of the compile
+        identity: metrics=False (default) engines run today's exact
+        programs; metrics=True tokens are bitwise identical (the
+        test_telemetry.py contract).
+        trace_capacity: ring-buffer depth of the always-on host-side
+        `self.tracer` (request lifecycle spans, decode-block spans, and
+        the unified degradation-event stream). Bounded memory forever —
+        O(trace_capacity), however long the engine serves."""
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -928,12 +997,14 @@ class ServingEngine:
         self.share_prefix = (bool(share_prefix) and kv_layout == "paged"
                              and mesh is None)
         self.share_min_prefix = max(1, share_min_prefix)
+        self.metrics = bool(metrics)
         self.key = jax.random.PRNGKey(seed)
         self._c = _get_compiled(cfg, max_len, decode_impl, top_k, mesh,
                                 profile, self.tokens_per_step,
                                 self.speculative,
                                 get_drafter(draft) if self.speculative
-                                else None, donate, self.faults, kv_layout)
+                                else None, donate, self.faults, kv_layout,
+                                self.metrics)
         self.drafter = self._c.drafter
         self.params = (params if mesh is None
                        else jax.device_put(params, self._c.param_sharding))
@@ -982,26 +1053,98 @@ class ServingEngine:
         # "stale, rebuild from the host mirrors" (set by every admission)
         self._dev: Optional[Dict[str, Any]] = None
         self._completed: List[Result] = []
+        # device metrics carry (metrics=True): persistent OUTSIDE _dev so
+        # admission restages never reset counters; donated per block like
+        # the caches, read only via device_metrics()'s explicit sync
+        self._mx: Optional[Dict[str, Any]] = None
+        if self.metrics:
+            self._stage_metrics()
+        # host-side lifecycle tracer (always on — O(1) Python per hook,
+        # zero device work) + its subscription to the unified degradation
+        # bus: the tracer's bounded `events` ring sees every record_event
+        # without consuming the bus (tests/benches still drain it)
+        self.tracer = Tracer(capacity=trace_capacity)
+        TEV.BUS.subscribe(self.tracer.on_bus_event)
         # decode telemetry (accumulated across run()/step() calls):
         # spec_steps counts executed verify dispatches, draft_proposed /
-        # draft_accepted count drafts offered vs kept (acceptance_rate),
-        # tokens_emitted counts every token produced by decode steps.
+        # draft_accepted count drafts offered vs kept (acceptance_rate).
+        # PER-ATTEMPT vs PER-REQUEST accounting (the retry drift fix):
+        # tokens_emitted counts every token produced by decode steps —
+        # WORK, including tokens a failed attempt discarded before its
+        # readmission; tokens_delivered counts tokens in finalized
+        # Results — exactly once per request, whatever max_retries did.
         # The resilience counters mirror the degradation-event bus
         # (faults.consume_events) so a bench/test can assert "nothing
         # degraded" from either side.
         self.stats = {"spec_steps": 0, "draft_proposed": 0,
                       "draft_accepted": 0, "tokens_emitted": 0,
+                      "tokens_delivered": 0,
                       "quarantined": 0, "rejected": 0, "deadline": 0,
                       "failed": 0, "kernel_fallbacks": 0,
                       "spec_autodisable": 0, "spec_resume": 0,
                       "readmitted": 0, "prefill_tokens_computed": 0,
-                      "prefill_prefix_shared": 0}
+                      "prefill_prefix_shared": 0, "cow_moves": 0}
 
     @property
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the verifier kept."""
         p = self.stats["draft_proposed"]
         return self.stats["draft_accepted"] / p if p else 0.0
+
+    # -------------------------------------------------------- observability --
+    def _stage_metrics(self):
+        """(Re)create the device metrics carry, zeroed, placed to match the
+        scan in_shardings (the guarded dispatch may not reshard)."""
+        self._mx = MX.init_metrics(self.slots)
+        if self.mesh is not None:
+            veci = self._c.batch_sharding(
+                self._c._sds((self.slots,)), self.slots)
+            self._mx = jax.device_put(
+                self._mx, MX.metrics_shardings(veci, self._c._rep))
+
+    def device_metrics(self, per_slot: bool = False) -> Dict[str, Any]:
+        """Read the device-resident counters — an EXPLICIT, scheduled host
+        sync outside the decode transfer guard (the one place layer-1
+        telemetry touches the host). Returns int totals, or the raw
+        (slots,) vectors with per_slot=True. Empty when metrics=False."""
+        if self._mx is None:
+            return {}
+        host = {k: np.asarray(v) for k, v in self._mx.items()}
+        if per_slot:
+            return host
+        return {k: int(v.sum()) if v.ndim else int(v)
+                for k, v in host.items()}
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of host stats + device counters +
+        tracer latency quantiles (one scrape endpoint's worth)."""
+        counters = dict(self.stats)
+        counters.update({f"device_{k}": v
+                         for k, v in self.device_metrics().items()})
+        counters.update(self.paged_stats())
+        doc = {f"device_{k}": f"{v} (device-resident counter)"
+               for k, v in MX.COUNTER_DOC.items()}
+        return prometheus_text(counters, self.tracer.latency_summary(),
+                               doc=doc)
+
+    def chrome_trace(self) -> dict:
+        """Chrome-trace JSON of the tracer's retained window (load in
+        chrome://tracing / Perfetto)."""
+        return self.tracer.chrome_trace(metadata={
+            "model": self.cfg.name, "slots": self.slots,
+            "decode_impl": self.decode_impl,
+            "speculative": self.speculative, "kv_layout": self.kv_layout,
+            "metrics": self.metrics})
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One observability snapshot (the `swat-scope` CLI's payload):
+        host stats, device counters, latency quantiles, pool occupancy."""
+        return {"stats": dict(self.stats),
+                "device": self.device_metrics(),
+                "latency": self.tracer.latency_summary(),
+                "paged": self.paged_stats(),
+                "ring_modulus": self._c.ring_mod,
+                "dropped_trace_records": self.tracer.dropped_requests}
 
     # --------------------------------------------------------- resilience --
     _STATUS_COUNTER = {"rejected": "rejected", "poisoned": "quarantined",
@@ -1019,6 +1162,11 @@ class ServingEngine:
         res = Result(rid, tokens, status=status, reason=reason,
                      retries=self._retry_counts.get(rid, 0))
         self._completed.append(res)
+        # delivered = tokens in the FINAL Result, counted exactly once per
+        # request (readmitted attempts never reach here); contrast
+        # tokens_emitted, the per-attempt work counter
+        self.stats["tokens_delivered"] += len(tokens)
+        self.tracer.on_finish(rid, status, len(tokens))
         if status != "ok":
             self.stats[self._STATUS_COUNTER[status]] += 1
             F.record_event(self._STATUS_EVENT[status], rid=rid,
@@ -1078,6 +1226,7 @@ class ServingEngine:
 
     # ------------------------------------------------------------ prefill --
     def _prefill_into(self, plan: PrefillPlan, slots: List[int]):
+        self.tracer.on_admit([r.rid for r in plan.requests])
         n, l_pad = plan.tokens.shape
         tokens = jnp.asarray(plan.tokens)
         lengths = jnp.asarray(plan.lengths)
@@ -1120,6 +1269,7 @@ class ServingEngine:
         temps = np.asarray([r.temperature for r in plan.requests], np.float32)
         self.key, sub = jax.random.split(self.key)
         first = np.asarray(self._c.sample(n)(sub, logits, jnp.asarray(temps)))
+        self.tracer.on_first_token([r.rid for r in plan.requests])
         if self._paged is not None:
             # shareability is judged against EVERY position prefill wrote —
             # padded rows carry (masked) garbage up to l_pad, so the
@@ -1259,6 +1409,7 @@ class ServingEngine:
         m = max((len(v) for v in moves.values()), default=0)
         if m == 0 and not pm.dirty:
             return
+        self.stats["cow_moves"] += sum(len(v) for v in moves.values())
         tables = {f"l{i}": jnp.asarray(t) for i, t in pm.tables.items()}
         if m:
             # one bucketed move width per compile; layers with fewer moves
@@ -1319,9 +1470,15 @@ class ServingEngine:
                                 self.mesh, self.profile,
                                 self.tokens_per_step, self.speculative,
                                 self.drafter, self._c.donate, self.faults,
-                                self.kv_layout)
+                                self.kv_layout, self.metrics)
         deleted = any(getattr(l, "is_deleted", lambda: False)()
                       for l in jax.tree.leaves(self.caches))
+        if self.metrics and any(getattr(l, "is_deleted", lambda: False)()
+                                for l in jax.tree.leaves(self._mx)):
+            # the failed dispatch consumed the donated metrics carry:
+            # counters restart from zero (documented loss — rare, and the
+            # kernel_fallbacks stat records that it happened)
+            self._stage_metrics()
         if not deleted:
             return self._decode_block(n)
         done = []
@@ -1421,17 +1578,24 @@ class ServingEngine:
         guard = (jax.transfer_guard("disallow") if self.transfer_guard
                  else contextlib.nullcontext())
         extra = (dev["fin"],) if inject else ()
+        # metrics carry rides LAST (donated); its updated pytree comes
+        # back last and is simply re-fed next block — no host sync here
+        mextra = (self._mx,) if self.metrics else ()
+        t0 = self.tracer.clock()
         try:
             if use_spec:
                 with guard:
                     outs = self._c.spec_scan(n, self.slots)(
                         self.params, self.caches, dev["tok"], dev["active"],
                         dev["budget"], dev["temps"], dev["anyt"], self.key,
-                        dev["hist"], dev["hcnt"], dev["poisoned"], *extra)
+                        dev["hist"], dev["hcnt"], dev["poisoned"],
+                        *extra, *mextra)
                 (self.caches, tok, active_out, budget, self.key, hist, hcnt,
                  toks, emit, steps, poisoned) = outs[:11]
                 if inject:
                     dev["fin"] = outs[11]
+                if self.metrics:
+                    self._mx = outs[11 + (1 if inject else 0)]
                 # drafter state stays device-resident too; _prefill_into
                 # materializes to numpy only when it needs to seed a row
                 self.slot_hist = hist
@@ -1452,11 +1616,13 @@ class ServingEngine:
                     outs = self._c.scan(n, self.slots)(
                         self.params, self.caches, dev["tok"], dev["active"],
                         dev["budget"], dev["temps"], dev["anyt"], self.key,
-                        dev["poisoned"], *extra)
+                        dev["poisoned"], *extra, *mextra)
                 (self.caches, tok, active_out, budget, self.key, toks,
                  emit, poisoned) = outs[:8]
                 if inject:
                     dev["fin"] = outs[8]
+                if self.metrics:
+                    self._mx = outs[8 + (1 if inject else 0)]
                 dev.update(tok=tok, active=active_out, budget=budget,
                            poisoned=poisoned)
                 toks, emit = np.asarray(toks), np.asarray(emit)
@@ -1465,6 +1631,10 @@ class ServingEngine:
         except F.KernelDispatchError as e:
             return self._kernel_fallback(e, n)
         self.stats["tokens_emitted"] += int(emit.sum())
+        # the np.asarray(emit) above IS the block's host sync — the span
+        # closed here covers dispatch + device execution + drain
+        self.tracer.on_block("spec" if use_spec else "seq", n, t0,
+                             int(emit.sum()))
         if self._paged is not None:
             # advance the per-slot ring-write position mirror: sequential
             # steps write one row per executed step unconditionally (+n);
@@ -1547,6 +1717,7 @@ class ServingEngine:
         self._run_t0 = time.monotonic()
         pending: Deque[Request] = collections.deque()
         for r in requests:
+            self.tracer.on_submit(r.rid)
             if self.max_pending is not None and \
                     len(pending) >= self.max_pending:
                 self._finish(r.rid, [], "rejected",

@@ -27,12 +27,14 @@ compile identity (`_get_compiled`), like the drafter spec — two engines
 differing only in faults get different programs, and `FaultPlan()` (the
 default) compiles the production program with zero injection code.
 
-The module also carries the engine's structured degradation-event channel
-(`record_event`/`consume_events`, mirroring `swat_decode._PAD_EVENTS`):
-every quarantine, fallback, rejection, and deadline expiry is recorded as a
-dict so tests, benchmarks (`BENCH_serve.json` resilience section), and the
-`kernel_bench --smoke` gate can assert "no degradation fired on a clean
-run" without scraping logs.
+The module also re-exports the engine's structured degradation-event
+channel (`record_event`/`consume_events`) as a back-compat shim over the
+unified telemetry bus (`repro.telemetry.events`): every quarantine,
+fallback, rejection, and deadline expiry is recorded as a dict so tests,
+benchmarks (`BENCH_serve.json` resilience section), and the `kernel_bench
+--smoke` gate can assert "no degradation fired on a clean run" without
+scraping logs — and engine tracers see the same stream through their bus
+subscription (one stream, not two).
 """
 from __future__ import annotations
 
@@ -143,24 +145,16 @@ class FaultPlan:
 
 
 # ------------------------------------------------- degradation event bus --
+# Back-compat shim: the degradation stream now lives on the UNIFIED
+# telemetry bus (`repro.telemetry.events`) so engine tracers, benches,
+# and tests all read one stream, not two. These re-exports keep every
+# historical `faults.record_event` / `faults.consume_events` call site
+# working; the old module-local `_EVENTS` list (the duplicate consume
+# path) is deleted — recording here and draining from telemetry (or vice
+# versa) observe the same queue.
 
-_EVENTS: List[dict] = []
-
-
-def record_event(kind: str, **details) -> None:
-    """Record one structured degradation event (quarantine, fallback,
-    rejection, deadline, spec disable/resume...). Process-global like
-    `swat_decode._PAD_EVENTS` — drain with `consume_events()`."""
-    _EVENTS.append({"kind": kind, **details})
-
-
-def consume_events() -> List[dict]:
-    out, _EVENTS[:] = list(_EVENTS), []
-    return out
-
-
-def peek_events() -> List[dict]:
-    return list(_EVENTS)
+from repro.telemetry.events import (consume_events,  # noqa: F401,E402
+                                    peek_events, record_event)
 
 
 # ------------------------------------------------- simulated kernel fault --

@@ -1,0 +1,73 @@
+"""The unified degradation-event bus (one stream, not two).
+
+Before swatscope, structured degradation events lived in a module-global
+list inside `serving/faults.py` while the tracer would have needed its own
+copy — two half-buses. This module is now the single store:
+
+  * `record_event(kind, **details)` appends to the process-global queue
+    AND fans out to every subscribed sink (engine tracers subscribe their
+    bounded ring buffers via weakrefs, so a garbage-collected engine
+    never leaks a subscription).
+  * `consume_events()` / `peek_events()` keep the historical drain
+    semantics every resilience test and bench asserts against.
+  * `serving/faults.py` re-exports these names as a thin back-compat
+    shim — its own `_EVENTS` list (the duplicate consume path) is gone.
+
+Events are plain dicts with a "kind" key, mirroring
+`swat_decode._PAD_EVENTS`. The queue is host-side Python only — nothing
+here ever touches a device buffer or a jit trace.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Callable, List
+
+
+class EventBus:
+    """A consumable event queue plus weakly-held subscriber fan-out."""
+
+    def __init__(self):
+        self._events: List[dict] = []
+        self._subs: List[weakref.WeakMethod] = []
+
+    def record(self, kind: str, **details) -> None:
+        ev = {"kind": kind, **details}
+        self._events.append(ev)
+        if self._subs:
+            alive = []
+            for wm in self._subs:
+                cb = wm()
+                if cb is not None:
+                    cb(dict(ev))
+                    alive.append(wm)
+            self._subs = alive
+
+    def consume(self) -> List[dict]:
+        out, self._events[:] = list(self._events), []
+        return out
+
+    def peek(self) -> List[dict]:
+        return list(self._events)
+
+    def subscribe(self, bound_method: Callable[[dict], None]) -> None:
+        """Fan events out to `bound_method(event_dict)` — held via
+        WeakMethod, so the subscription dies with its owner."""
+        self._subs.append(weakref.WeakMethod(bound_method))
+
+
+BUS = EventBus()
+
+
+def record_event(kind: str, **details) -> None:
+    """Record one structured degradation event (quarantine, fallback,
+    rejection, deadline, spec disable/resume...) on the global bus."""
+    BUS.record(kind, **details)
+
+
+def consume_events() -> List[dict]:
+    """Drain the global queue (subscribed tracers keep their copies)."""
+    return BUS.consume()
+
+
+def peek_events() -> List[dict]:
+    return BUS.peek()

@@ -1,0 +1,163 @@
+"""Kernel profiling hooks (swatscope layer 3) — opt-in, never hot-path.
+
+Three tools that feed the shape-adaptive-dispatch roadmap item with real
+data instead of guesswork:
+
+  dispatch census   `kernels/ops.py` / `swat_decode.py` call
+                    `record_dispatch()` at TRACE time when the census is
+                    enabled — jit traces once per shape, so the census is
+                    a complete (shape -> dispatch count) map of what the
+                    engine actually compiled, at zero runtime cost (the
+                    compiled program is byte-identical; nothing executes
+                    per step).
+  analytic roofline `banded_decode_cost()` — FLOPs over the logical
+                    banded geometry (window + globals + lookahead, the
+                    paper's O(window) argument) and HBM bytes over the
+                    physical ring rows a decode step actually touches;
+                    intensity = flops/bytes locates each shape on the
+                    roofline.
+  latency sampler   `sample_latency()` / `profile_decode()` — standalone
+                    timed dispatches (block_until_ready, medians over
+                    iters) for per-shape block-latency rows, the same
+                    measurement discipline as benchmarks/common.time_fn.
+
+Census state is module-global and OFF by default — `enable_census()` in
+a `try/finally` like `faults.install_kernel_failure`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+_CENSUS_ON = False
+_CENSUS: Dict[Tuple, Dict[str, Any]] = {}
+
+
+def enable_census(on: bool = True) -> None:
+    """Start (or stop) recording kernel dispatch traces. Trace-time only:
+    enabling this never changes a compiled program or adds runtime work."""
+    global _CENSUS_ON
+    _CENSUS_ON = on
+
+
+def census_enabled() -> bool:
+    return _CENSUS_ON
+
+
+def record_dispatch(**fields) -> None:
+    """Record one kernel trace event (deduped by field tuple; `traces`
+    counts how many times jit traced this exact shape)."""
+    if not _CENSUS_ON:
+        return
+    key = tuple(sorted((k, repr(v)) for k, v in fields.items()))
+    rec = _CENSUS.get(key)
+    if rec is None:
+        _CENSUS[key] = {**fields, "traces": 1}
+    else:
+        rec["traces"] += 1
+
+
+def consume_census() -> List[Dict[str, Any]]:
+    """Drain the census (insertion order)."""
+    out = list(_CENSUS.values())
+    _CENSUS.clear()
+    return out
+
+
+# ------------------------------------------------------------- roofline ---
+
+def banded_decode_cost(*, b: int, h_q: int, h_kv: int, t: int, d: int,
+                       window: int, num_global: int = 0,
+                       cap: Optional[int] = None,
+                       dtype_bytes: int = 2,
+                       fused: bool = True) -> Dict[str, float]:
+    """Analytic cost of one T-token banded decode step.
+
+    FLOPs count the LOGICAL band each query row attends — min(cap,
+    window + globals + T) rows for sparse specs, the whole cap for dense
+    (window=0 means dense here) — with 2*d per QK and AV MAC plus ~4 ops
+    per softmax cell. Bytes count the PHYSICAL traffic: both ring caches
+    streamed once (cap rows), q read, out written, and the fused
+    insert's T new K/V rows written back. intensity (flops/byte) tells
+    you which side of the roofline ridge the shape sits on — decode is
+    classically bandwidth-bound, which is why the fused kernel's single
+    cache pass is the whole game."""
+    assert cap is not None and cap >= 1
+    band = min(cap, window + num_global + t) if window else cap
+    q_rows = b * h_q * t
+    flops = q_rows * band * (4 * d + 4)
+    bytes_ = (2 * b * h_kv * cap * d * dtype_bytes      # K+V stream
+              + q_rows * d * dtype_bytes                # q read
+              + q_rows * d * dtype_bytes)               # out write
+    if fused:
+        bytes_ += 2 * b * h_kv * t * d * dtype_bytes    # ring insert
+    return {"flops": float(flops), "hbm_bytes": float(bytes_),
+            "intensity": float(flops) / float(bytes_), "band_rows": band}
+
+
+# ------------------------------------------------------- latency sampling --
+
+def sample_latency(fn, *args, iters: int = 30, warmup: int = 3
+                   ) -> Dict[str, float]:
+    """Block-latency samples of one jitted dispatch: median / p95 /
+    best, in microseconds. Synchronizes every call (block_until_ready) —
+    which is exactly why this lives OUTSIDE the engine hot path."""
+    import jax
+    import numpy as np
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    arr = np.asarray(ts)
+    return {"p50_us": float(np.percentile(arr, 50)),
+            "p95_us": float(np.percentile(arr, 95)),
+            "best_us": float(arr.min()), "iters": int(arr.size)}
+
+
+def profile_decode(shapes: List[Dict[str, int]], *, impl: str = "ref",
+                   interpret: Optional[bool] = None, iters: int = 20,
+                   seed: int = 0) -> List[Dict[str, Any]]:
+    """Per-shape block-latency + roofline rows for the fused decode op.
+
+    Each shape dict: {b, h_kv, group, t, d, window, num_global, cap}
+    (cap = physical ring rows; must satisfy the fused-insert geometry,
+    cap >= window + globals + t for windowed specs). Returns one row per
+    shape merging measured latency with the analytic cost — the
+    autotune-table feedstock."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.types import AttentionSpec
+    from repro.kernels import ops
+
+    rows: List[Dict[str, Any]] = []
+    rng = np.random.RandomState(seed)
+    for sh in shapes:
+        b, h_kv, group = sh["b"], sh["h_kv"], sh.get("group", 1)
+        t, d, cap = sh.get("t", 1), sh["d"], sh["cap"]
+        window, g = sh.get("window", 0), sh.get("num_global", 0)
+        h_q = h_kv * group
+        spec = (AttentionSpec(kind="swat", window=window, num_global=g)
+                if window else AttentionSpec(kind="dense"))
+        q = jnp.asarray(rng.randn(b, h_q, t, d), jnp.float32)
+        kc = jnp.asarray(rng.randn(b, h_kv, cap, d), jnp.bfloat16)
+        vc = jnp.asarray(rng.randn(b, h_kv, cap, d), jnp.bfloat16)
+        nk = jnp.asarray(rng.randn(b, h_kv, t, d), jnp.bfloat16)
+        nv = jnp.asarray(rng.randn(b, h_kv, t, d), jnp.bfloat16)
+        pos = jnp.full((b,), max(cap - t, g), jnp.int32)
+
+        fn = jax.jit(lambda q, kc, vc, nk, nv, pos: ops.decode_attention(
+            q, kc, vc, None, spec, impl=impl, interpret=interpret,
+            new_kv=(nk, nv), pos=pos, ring_cap=cap)[0])
+        lat = sample_latency(fn, q, kc, vc, nk, nv, pos, iters=iters)
+        cost = banded_decode_cost(b=b, h_q=h_q, h_kv=h_kv, t=t, d=d,
+                                  window=window, num_global=g, cap=cap)
+        us = max(lat["p50_us"], 1e-9)
+        rows.append({**sh, "impl": impl, **lat, **cost,
+                     "achieved_gflops": cost["flops"] / us / 1e3,
+                     "achieved_gbps": cost["hbm_bytes"] / us / 1e3})
+    return rows

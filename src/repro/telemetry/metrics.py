@@ -1,0 +1,132 @@
+"""Device-resident decode counters (swatscope layer 1).
+
+A `Metrics` pytree of int32 counters rides the decode / spec-verify scan
+bodies as one extra carry — exactly like the ring caches: donated, never
+read mid-block, slot-sharded under a mesh so slot-parallel decode stays
+collective-free. Every update is a pure per-slot add derived from values
+the body already computes (`ok` / `e` / `bad`), so a metrics-on engine's
+tokens are bitwise a metrics-off engine's (the test_telemetry.py
+contract) and the only cost is a handful of elementwise int32 ops per
+step — measured < 3% tok/s at smoke scale (BENCH_serve.json
+`telemetry`).
+
+Counters (per slot unless noted):
+
+  tokens           decode tokens emitted (prefill-sampled tokens are
+                   host-side; see ServingEngine.stats)
+  drafts_proposed  speculative drafts offered to the verifier
+  drafts_accepted  drafts the verifier kept
+  quarantined      numerical-guard trips (non-finite logits rows)
+  ring_wraps       completed ring revolutions of decode writes, counted
+                   against the engine's NARROWEST ring (`ring_modulus`);
+                   cumulative across slot occupants like every counter
+  pos              cumulative decode-write count (ring_wraps' phase
+                   accumulator; also per-slot work done)
+  steps            scalar: executed scan/verify iterations (replicated
+                   under a mesh — increments identically on every
+                   device, no collective)
+
+The host reads these ONLY at `ServingEngine.device_metrics()` — an
+explicit, scheduled sync outside the decode transfer guard, never inside
+a block.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+PER_SLOT = ("tokens", "drafts_proposed", "drafts_accepted",
+            "quarantined", "ring_wraps", "pos")
+SCALARS = ("steps",)
+
+COUNTER_DOC: Dict[str, str] = {
+    "tokens": "decode tokens emitted on device",
+    "drafts_proposed": "speculative draft tokens offered to the verifier",
+    "drafts_accepted": "speculative draft tokens the verifier kept",
+    "quarantined": "numerical-guard quarantine trips",
+    "ring_wraps": "completed ring-cache revolutions of decode writes",
+    "pos": "cumulative decode ring writes per slot",
+    "steps": "executed decode/verify scan iterations",
+}
+
+
+def init_metrics(slots: int) -> Dict[str, Any]:
+    """Fresh all-zero counters (device arrays via jnp; the engine
+    device_puts them onto the mesh with `metrics_shardings`)."""
+    mx = {k: jnp.zeros((slots,), jnp.int32) for k in PER_SLOT}
+    for k in SCALARS:
+        mx[k] = jnp.zeros((), jnp.int32)
+    return mx
+
+
+def metrics_shardings(veci, rep) -> Dict[str, Any]:
+    """Sharding pytree matching `init_metrics`: per-slot vectors ride the
+    slot axis (`veci`, the engine's decode_batch_sharding), the scalar
+    step counter is replicated (`rep`)."""
+    sh = {k: veci for k in PER_SLOT}
+    for k in SCALARS:
+        sh[k] = rep
+    return sh
+
+
+def ring_modulus(cfg, max_len: int, lookahead: int = 0) -> int:
+    """The wrap modulus for the `ring_wraps` counter: the LOGICAL ring
+    capacity of the engine's narrowest attention cache (a dense config's
+    "ring" is the full context — it wraps never in practice). Static per
+    engine, baked into the compiled scan as a constant."""
+    from repro.core.layers import cache_capacity
+    from repro.core.model import attn_cfg
+    caps = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind.startswith("mamba"):
+            continue
+        caps.append(cache_capacity(attn_cfg(cfg, kind, index=i), max_len,
+                                   lookahead))
+    return max(1, min(caps)) if caps else max(1, max_len)
+
+
+def _wraps(mx: Dict[str, Any], pos, ring_mod: int):
+    """Ring revolutions completed by advancing `pos` from its carried
+    value: floor(new/mod) - floor(old/mod). Non-negative (pos only
+    grows); with per-step emission <= lookahead+1 << mod it is 0 or 1."""
+    return mx["ring_wraps"] + (pos // ring_mod - mx["pos"] // ring_mod)
+
+
+def seq_update(mx: Dict[str, Any], ok, bad, ring_mod: int
+               ) -> Dict[str, Any]:
+    """One sequential decode step: `ok` (slots,) bool = emitted this
+    step, `bad` (slots,) bool = guard-quarantined this step. Pure adds —
+    no effect on sampling, RNG, or control flow."""
+    e = ok.astype(jnp.int32)
+    pos = mx["pos"] + e
+    return {
+        "tokens": mx["tokens"] + e,
+        "drafts_proposed": mx["drafts_proposed"],
+        "drafts_accepted": mx["drafts_accepted"],
+        "quarantined": mx["quarantined"] + bad.astype(jnp.int32),
+        "ring_wraps": _wraps(mx, pos, ring_mod),
+        "pos": pos,
+        "steps": mx["steps"] + 1,
+    }
+
+
+def spec_update(mx: Dict[str, Any], e, bad, k: int, ring_mod: int
+                ) -> Dict[str, Any]:
+    """One speculative verify step: `e` (slots,) int32 = tokens emitted
+    (accepted drafts + bonus, 0 for inactive slots), `bad` = guard trip,
+    `k` = drafts proposed per active slot. Mirrors the host-side
+    accounting in `_decode_block` exactly: a slot that ran (e >= 1)
+    proposed k drafts and kept e - 1 of them."""
+    ran = (e >= 1).astype(jnp.int32)
+    pos = mx["pos"] + e
+    return {
+        "tokens": mx["tokens"] + e,
+        "drafts_proposed": mx["drafts_proposed"] + k * ran,
+        "drafts_accepted": mx["drafts_accepted"]
+        + jnp.maximum(e - 1, 0) * ran,
+        "quarantined": mx["quarantined"] + bad.astype(jnp.int32),
+        "ring_wraps": _wraps(mx, pos, ring_mod),
+        "pos": pos,
+        "steps": mx["steps"] + 1,
+    }

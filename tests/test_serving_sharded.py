@@ -152,6 +152,34 @@ def test_speculative_slot_parallel_identical():
     """)
 
 
+def test_metrics_slot_parallel_identical():
+    """Device counters on the 4-device slot-parallel mesh — the ISSUE-10
+    acceptance bar: the metrics-on engine is BITWISE identical to the
+    metrics-off sharded run (sequential AND speculative), the counter
+    vectors actually ride the slot axis (no silent replication), and the
+    device totals agree with the host-side stats."""
+    run_sub(COMMON + """
+    _, base = run(mesh_lib.make_debug_mesh(4, 1))
+    eng, out = run(mesh_lib.make_debug_mesh(4, 1), metrics=True)
+    assert base == out, (base, out)
+    mx = eng._mx
+    assert "data" in axes_of(mx["tokens"].sharding.spec), \\
+        mx["tokens"].sharding.spec
+    dev = eng.device_metrics()
+    assert dev["tokens"] == eng.stats["tokens_emitted"]
+    assert dev["quarantined"] == 0
+
+    _, sbase = run(mesh_lib.make_debug_mesh(4, 1), speculative=3)
+    seng, sout = run(mesh_lib.make_debug_mesh(4, 1), speculative=3,
+                     metrics=True)
+    assert sbase == sout, (sbase, sout)
+    sdev = seng.device_metrics()
+    assert sdev["drafts_proposed"] == seng.stats["draft_proposed"] > 0
+    assert sdev["drafts_accepted"] == seng.stats["draft_accepted"]
+    print("ok sharded metrics identical; device tokens", dev["tokens"])
+    """)
+
+
 def test_chaos_quarantine_slot_parallel():
     """Fault injection on the 4-device slot-parallel mesh — the ISSUE-8
     acceptance bar: NaN-poisoning one slot's logits quarantines exactly
